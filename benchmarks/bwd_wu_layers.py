@@ -1,0 +1,53 @@
+"""Paper Fig. 5 (a)/(b): backward-data (via duality) and weight-update
+passes per ResNet-50 layer.  `derived` reports the duality scenario chosen
+(§II-I) and the §II-J weight-update parallelization pick for a 256-chip
+worker pool."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.conv import conv2d_bwd_data_via_fwd, conv2d_bwd_weights
+from repro.core.duality import bwd_data_plan
+from repro.core.wu_strategy import choose_wu_strategy
+from repro.graph.topology import RESNET50_LAYERS
+
+MINIBATCH = 4
+SUBSET = [1, 2, 4, 6, 8, 13, 16, 18, 20]   # representative layer ids
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for lid in SUBSET:
+        l = RESNET50_LAYERS[lid]
+        h = min(l["h"], 56)
+        scale = (l["h"] / h) ** 2
+        r, stride = l["r"], l["stride"]
+        pad = r // 2
+        p = (h + 2 * pad - r) // stride + 1
+        x = jnp.asarray(rng.standard_normal(
+            (MINIBATCH, h, h, l["c"])), jnp.float32)
+        do = jnp.asarray(rng.standard_normal(
+            (MINIBATCH, p, p, l["k"])), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (r, r, l["c"], l["k"])) * 0.05, jnp.float32)
+
+        scen, _ = bwd_data_plan(r=r, s=r, stride=stride, padding=pad,
+                                input_hw=(h, h))
+        bwd = jax.jit(lambda do, w: conv2d_bwd_data_via_fwd(
+            do, w, stride=stride, padding=pad, input_hw=(h, h), impl="xla"))
+        us_b = time_call(bwd, do, w) * scale
+        emit(f"resnet50_bwd_L{lid:02d}", us_b, f"duality={scen}")
+
+        wu = jax.jit(lambda x, do: conv2d_bwd_weights(
+            x, do, stride=stride, padding=pad, filter_rs=(r, r), impl="xla"))
+        us_w = time_call(wu, x, do) * scale
+        strat = choose_wu_strategy(n=256, c=l["c"], k=l["k"], h=l["h"],
+                                   w=l["w"], p=p, q=p, r=r, s=r,
+                                   n_workers=256)
+        emit(f"resnet50_wu_L{lid:02d}", us_w,
+             f"wu_strategy={strat.strategy}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5):
+    """Median wall time in us (jit'd fn, blocked until ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,27 @@
+"""Beyond-paper table: the 40-cell (arch × shape) analytic roofline summary
+(reads the dry-run evidence when present; pure-analytic otherwise)."""
+import pathlib
+
+from benchmarks.common import emit
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.shapes import applicable
+from repro.launch import analytic as A
+
+
+def main():
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, _ = applicable(cfg, shape)
+            if not ok:
+                emit(f"cell_{arch}_{sname}", 0.0, "skip=no-subquadratic")
+                continue
+            t = A.analytic_roofline(cfg, shape, chips=256, model_par=16,
+                                    data_par=16)
+            emit(f"cell_{arch}_{sname}", t.step_time_s * 1e6,
+                 f"dominant={t.dominant};"
+                 f"mfu={A.mfu(cfg, shape, t, 256):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 8 (§II-K reduced precision), TPU serving edition: int8
+weights with f32 accumulation.  Measures quantization error on a real
+smoke model and reports the modeled decode speedup per arch (bytes-bound
+roofline: < 2x because KV/activations stay bf16 — the same reason the
+paper's int16 kernels got 1.6x, not 2x)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.core.quantize import dequantize, quantize_int8
+from repro.launch import analytic as A
+from repro.nn import transformer as T
+
+
+def main():
+    # numerical error on a real (smoke) model + decode logits drift
+    cfg = smoke_config(get_config("qwen2-1.5b"))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    qp = quantize_int8(params, min_size=64)
+    deq = dequantize(qp, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    lf, _ = T.forward(params, cfg, tokens=toks)
+    lq, _ = T.forward(deq, cfg, tokens=toks)
+    drift = float(jnp.abs(jax.nn.softmax(lf) - jax.nn.softmax(lq)).max())
+    f = jax.jit(lambda p, t: T.forward(p, cfg, tokens=t)[0])
+    us = time_call(f, deq, toks)
+    emit("int8_weights_fwd", us, f"softmax_drift={drift:.4f}")
+
+    # modeled decode speedup per arch (memory-roofline ratio)
+    shape = SHAPES["decode_32k"]
+    for arch in ("qwen3-8b", "jamba-1.5-large-398b", "dbrx-132b"):
+        c = get_config(arch)
+        base = A.analytic_roofline(c, shape, chips=256, model_par=16,
+                                   data_par=16)
+        q = A.analytic_roofline(c, shape, chips=256, model_par=16,
+                                data_par=16, quantized=True)
+        emit(f"int8_decode_model_{arch}", q.step_time_s * 1e6,
+             f"speedup={base.step_time_s/q.step_time_s:.2f}x;"
+             f"dominant={q.dominant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper
+tables).  Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig 4 / Table I  -> resnet50_layers       (fwd per-layer, im2col vs direct)
+  Fig 5 (a)(b)     -> bwd_wu_layers         (duality bwd + weight update)
+  Fig 8            -> reduced_precision_bench (int8 weights, §II-K analog)
+  Fig 9            -> scaling_bench         (strong scaling, overlap model)
+  §II-G/GxM        -> fusion_bench          (fused vs unfused + ETG stats)
+  §II-H            -> streams_bench         (dryrun/segments accounting)
+  DESIGN §2 (MoE)  -> moe_streams_bench     (streams GMM vs dense loop)
+  beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
+"""
+import sys
+import traceback
+
+from benchmarks import (bwd_wu_layers, fusion_bench, inception_bench,
+                        lm_roofline_table, moe_streams_bench,
+                        reduced_precision_bench, resnet50_layers,
+                        scaling_bench, streams_bench)
+
+MODULES = [
+    ("resnet50_layers", resnet50_layers),
+    ("bwd_wu_layers", bwd_wu_layers),
+    ("fusion_bench", fusion_bench),
+    ("inception_bench", inception_bench),
+    ("streams_bench", streams_bench),
+    ("reduced_precision_bench", reduced_precision_bench),
+    ("scaling_bench", scaling_bench),
+    ("moe_streams_bench", moe_streams_bench),
+    ("lm_roofline_table", lm_roofline_table),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,FAILED", file=sys.stdout)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 9: end-to-end strong-scaling of ResNet-50 training.
+
+The paper reports ~90% parallel efficiency at 16 nodes with MLSL's
+overlapped all-reduce.  We reproduce the *model*: per-node step time =
+max(compute, gradient-all-reduce) when overlapped, compute + all-reduce
+when not — evaluated with the v5e roofline constants over 1..64 nodes, plus
+a measured single-host data point (images/s of the tiny GxM trainer on this
+CPU) as the absolute anchor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.graph import GxM, resnet50
+from repro.launch.roofline import ICI_BW, PEAK_FLOPS
+
+RESNET50_GFLOP = 4.1 * 3        # fwd+bwd+wu per image (GFLOP)
+RESNET50_PARAMS = 25.6e6
+LOCAL_BATCH = 32
+EFF_COMPUTE = 0.55              # kernel-level efficiency (paper: 55-80%)
+
+
+def modeled_imgs_per_s(nodes: int, overlap: bool) -> float:
+    t_comp = LOCAL_BATCH * RESNET50_GFLOP * 1e9 \
+        / (PEAK_FLOPS * EFF_COMPUTE)
+    t_ar = (2 * (nodes - 1) / max(nodes, 1)) * RESNET50_PARAMS * 4 / ICI_BW \
+        if nodes > 1 else 0.0
+    t = max(t_comp, t_ar) if overlap else t_comp + t_ar
+    return nodes * LOCAL_BATCH / t
+
+
+def main():
+    # measured single-host anchor (tiny config, CPU)
+    rng = np.random.default_rng(0)
+    m = GxM(resnet50(num_classes=10, stages=(1, 1, 1, 1)), impl="xla",
+            num_classes=10)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"image": jnp.asarray(rng.standard_normal((4, 32, 32, 3)),
+                                  jnp.float32),
+             "label": jnp.asarray([0, 1, 2, 3])}
+    step = jax.jit(m.sgd_train_step)
+    us = time_call(step, params, batch)
+    emit("gxm_train_step_host", us, f"imgs_per_s_host={4/(us/1e6):.1f}")
+
+    base = modeled_imgs_per_s(1, True)
+    for nodes in (1, 2, 4, 8, 16, 32, 64):
+        ov = modeled_imgs_per_s(nodes, overlap=True)
+        nov = modeled_imgs_per_s(nodes, overlap=False)
+        emit(f"scaling_model_n{nodes:02d}", 0.0,
+             f"imgs_per_s={ov:.0f};par_eff={ov/(nodes*base):.2f};"
+             f"no_overlap_eff={nov/(nodes*base):.2f}")
+
+
+if __name__ == "__main__":
+    main()

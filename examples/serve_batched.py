@@ -1,0 +1,10 @@
+"""Batched serving example: prefill + lockstep decode over a request batch
+(see launch/serve.py for the scheduler).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen2-1.5b", "--smoke", "--requests", "4",
+          "--max-new", "12"])

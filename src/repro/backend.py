@@ -1,0 +1,46 @@
+"""Kernel implementation dispatch.
+
+"pallas"    — real Mosaic lowering (TPU targets; what the dry-run *describes*)
+"interpret" — Pallas interpret mode (CPU correctness validation; tests)
+"xla"       — pure-jnp/lax reference path (CPU dry-run lowering at 512 devices
+              and the numerics oracle)
+
+The per-shape JIT specialization story of the paper (§II-D) is carried by
+jax.jit itself: every (layer shape × blocking) pair traces and compiles its
+own specialized kernel, on demand, cached — libxsmm's runtime code
+generation, one level up.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_VALID = ("pallas", "interpret", "xla")
+_backend = os.environ.get("REPRO_BACKEND", "xla")
+
+
+def get_backend() -> str:
+    return _backend
+
+
+def set_backend(name: str) -> None:
+    global _backend
+    assert name in _VALID, name
+    _backend = name
+
+
+@contextmanager
+def use_backend(name: str):
+    global _backend
+    prev = _backend
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _backend = prev
+
+
+def resolve(impl: str | None) -> str:
+    impl = impl or _backend
+    assert impl in _VALID, impl
+    return impl

@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, get_config, smoke_config, list_archs  # noqa: F401
+from repro.configs.shapes import SHAPES, cells_for, input_specs  # noqa: F401

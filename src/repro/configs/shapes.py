@@ -1,0 +1,75 @@
+"""Assigned input-shape sets and dry-run input specs.
+
+Each LM arch pairs with 4 shapes; ``train_*`` lowers train_step,
+``prefill_*`` lowers the prefill forward, ``decode_*``/``long_*`` lower
+serve_step (one token against a seq_len cache).  ``long_500k`` requires
+sub-quadratic sequence mixing — skipped (with a reason) for pure
+full-attention archs, run for ssm/hybrid (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import ModelCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelCfg, shape: Shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: no sub-quadratic path in "
+                       "its published form (DESIGN.md §5)")
+    return True, ""
+
+
+def cells_for(cfg: ModelCfg):
+    """All (shape, applicable, reason) cells for an arch."""
+    return [(s, *applicable(cfg, s)) for s in SHAPES.values()]
+
+
+def input_specs(cfg: ModelCfg, shape: Shape, *, for_cache: bool = True):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    b, l = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        if cfg.frontend == "vision":
+            # VLM: stub frontend delivers precomputed patch embeddings
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, l, cfg.d_model), dt),
+                "labels": jax.ShapeDtypeStruct((b, l), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, l), i32),
+            "labels": jax.ShapeDtypeStruct((b, l), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.frontend == "vision":
+            return {"embeds": jax.ShapeDtypeStruct((b, l, cfg.d_model), dt)}
+        return {"tokens": jax.ShapeDtypeStruct((b, l), i32)}
+    # decode: one token + cache of seq_len
+    from repro.nn.transformer import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, l))
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "cache": cache,
+        "idx": jax.ShapeDtypeStruct((), i32),
+    }

@@ -1,0 +1,4 @@
+from repro.core.conv import conv2d_fwd, conv2d_train  # noqa: F401
+from repro.core.blocking import conv_blocking, matmul_blocking  # noqa: F401
+from repro.core.streams import build_conv_schedule  # noqa: F401
+from repro.core.fusion import fuse_network  # noqa: F401

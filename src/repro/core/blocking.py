@@ -1,0 +1,91 @@
+"""Blocking heuristics — the paper's §II-B/C/D RB_P/RB_Q/cache-block choice,
+re-derived for the TPU memory hierarchy (HBM -> VMEM -> VREG, MXU 128x128).
+
+The paper picks register blocks to (a) hide FMA latency with independent
+accumulation chains and (b) keep the working set in L1/L2.  On TPU the
+analogous constraints are:
+  (a) the implicit-GEMM M-tile (rb_p * Q) should be >= 128 rows so the MXU
+      runs full-height passes (the "FMA latency" of the systolic array is the
+      pipeline fill, amortized by tall tiles);
+  (b) the per-grid-step working set (input plane slice + weight block +
+      output tile + accumulator) must fit the VMEM budget;
+  (c) minor dims should be multiples of 128 lanes / 8 sublanes (K, C blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+VMEM_BUDGET = 16 * 1024 * 1024   # bytes/core we allow a kernel to claim
+LANE = 128
+SUBLANE = 8
+MXU = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvBlocking:
+    rb_p: int          # output rows per microkernel (paper RB_P)
+    k_blk: int         # output-feature block (paper's K_b vector block)
+    c_blk: int         # input-feature block (streams variant only)
+    order: str         # dryrun loop order (paper §II-C)
+    vmem_bytes: int    # modeled working set
+
+
+def divisors(x: int):
+    return [d for d in range(1, x + 1) if x % d == 0]
+
+
+def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
+                  stride: int, padding: int, dtype_bytes: int = 4,
+                  vmem_budget: int = VMEM_BUDGET,
+                  require_divisor: bool = False) -> ConvBlocking:
+    p = (h + 2 * padding - r) // stride + 1
+    q = (w + 2 * padding - s) // stride + 1
+    hp, wp = h + 2 * padding + r, w + 2 * padding            # padded plane (upper bound)
+    k_blk = min(k, LANE)
+    c_blk = min(c, LANE)
+
+    def ws(rb_p: int) -> int:
+        plane = hp * wp * c * dtype_bytes
+        wblk = r * s * c * k_blk * dtype_bytes
+        out = rb_p * q * k_blk * dtype_bytes
+        acc = rb_p * q * k_blk * 4
+        return plane + wblk + out + acc
+
+    cands = divisors(p) if require_divisor else list(range(1, p + 1))
+    # smallest rb_p with a full-height MXU M-tile, then grow while VMEM allows
+    best = cands[0]
+    for rb in cands:
+        if ws(rb) > vmem_budget:
+            break
+        best = rb
+        if rb * q >= MXU:
+            break
+    # §II-C: for 1x1 convs pull the C loop in (order "npkc" keeps the output
+    # tile resident across C-blocks -> more output register reuse).
+    order = "npkc" if (r == 1 and s == 1) else "nkpc"
+    return ConvBlocking(rb_p=best, k_blk=k_blk, c_blk=c_blk, order=order,
+                        vmem_bytes=ws(best))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBlocking:
+    bm: int
+    bn: int
+    bk: int
+    vmem_bytes: int
+
+
+def matmul_blocking(m: int, n: int, k: int, *, dtype_bytes: int = 2,
+                    vmem_budget: int = VMEM_BUDGET) -> MatmulBlocking:
+    bm = min(m, MXU)
+    bn = min(n, MXU)
+    # largest bk (multiple of LANE, divisor of k) whose blocks fit VMEM
+    bk = min(k, 512)
+    while k % bk:
+        bk //= 2
+    def ws(bk_):
+        return (bm * bk_ + bk_ * bn) * dtype_bytes + 2 * bm * bn * 4
+    while bk > LANE and ws(bk) > vmem_budget:
+        bk //= 2
+    return MatmulBlocking(bm=bm, bn=bn, bk=max(bk, 1), vmem_bytes=ws(bk))

@@ -1,0 +1,98 @@
+"""DirectConv2D — the paper's contribution as a composable, differentiable
+JAX module.
+
+Forward: implementation-selected direct convolution with fused epilogue.
+Backward: custom VJP that implements the paper's training pipeline —
+  dI via duality (§II-I): weight transform + the same forward kernel;
+  dW via the update-pass kernel (§II-J).
+
+Implementation selection ("xla" / "interpret" / "pallas") is per-call or via
+``repro.backend``; blocking comes from ``core.blocking`` unless overridden —
+the per-shape JIT specialization of §II-D.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import backend as be
+from repro.core import duality
+from repro.core.blocking import conv_blocking
+from repro.kernels import ref
+from repro.kernels.conv2d_direct import conv2d_direct
+from repro.kernels.conv2d_wu import conv2d_wu
+
+
+def _lane_ok(c: int, k: int) -> bool:
+    # Pallas path wants feature dims that block cleanly; small-C layers
+    # (e.g. ResNet conv1, C=3) take the XLA/im2col path — see DESIGN.md §2.
+    return c % 8 == 0 and k % 8 == 0
+
+
+def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
+               shift=None, residual=None, relu=False, impl=None):
+    """Fused forward conv; dispatches on the selected implementation."""
+    impl = be.resolve(impl)
+    n, h, wdt, c = x.shape
+    r, s, _, k = w.shape
+    if impl == "xla" or not _lane_ok(c, k):
+        return ref.conv2d_fused(x, w, stride=stride, padding=padding,
+                                bias=bias, scale=scale, shift=shift,
+                                residual=residual, relu=relu)
+    blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=r, s=s, stride=stride,
+                        padding=padding, dtype_bytes=x.dtype.itemsize)
+    return conv2d_direct(x, w, stride=stride, padding=padding, bias=bias,
+                         scale=scale, shift=shift, residual=residual,
+                         relu=relu, rb_p=blk.rb_p, k_blk=blk.k_blk,
+                         interpret=(impl == "interpret"))
+
+
+def conv2d_bwd_data_via_fwd(do, w, *, stride, padding, input_hw, impl=None):
+    """dI using the §II-I duality: transform weights, run the fwd kernel."""
+    do2, wt, kw, post = duality.prepare_bwd_data(
+        do, w, stride=stride, padding=padding, input_hw=input_hw)
+    y = conv2d_fwd(do2, wt, stride=kw["stride"], padding=kw["padding"],
+                   impl=impl)
+    return post(y)
+
+
+def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None):
+    """dW via the update-pass kernel (§II-J)."""
+    impl = be.resolve(impl)
+    n, h, wdt, c = x.shape
+    _, p, q, k = do.shape
+    if impl == "xla" or not _lane_ok(c, k):
+        return ref.conv2d_bwd_weights(x, do, stride=stride, padding=padding,
+                                      filter_rs=filter_rs)
+    blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=filter_rs[0], s=filter_rs[1],
+                        stride=stride, padding=padding,
+                        dtype_bytes=x.dtype.itemsize, require_divisor=True)
+    return conv2d_wu(x, do, stride=stride, padding=padding,
+                     filter_rs=filter_rs, b_p=blk.rb_p, k_blk=blk.k_blk,
+                     interpret=(impl == "interpret"))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def conv2d_train(x, w, stride: int, padding: int, impl: str | None):
+    """Differentiable direct conv whose VJP is the paper's bwd pipeline."""
+    return conv2d_fwd(x, w, stride=stride, padding=padding, impl=impl)
+
+
+def _fwd(x, w, stride, padding, impl):
+    return conv2d_train(x, w, stride, padding, impl), (x, w)
+
+
+def _bwd(stride, padding, impl, resid, do):
+    x, w = resid
+    r, s, _, _ = w.shape
+    di = conv2d_bwd_data_via_fwd(do, w, stride=stride, padding=padding,
+                                 input_hw=(x.shape[1], x.shape[2]), impl=impl)
+    dw = conv2d_bwd_weights(x, do, stride=stride, padding=padding,
+                            filter_rs=(r, s), impl=impl)
+    return di.astype(x.dtype), dw.astype(w.dtype)
+
+
+conv2d_train.defvjp(_fwd, _bwd)

@@ -1,0 +1,89 @@
+"""Backward-by-duality (paper §II-I): rewrite the data-gradient convolution
+as a *forward* convolution over a transformed weight tensor, so one
+high-performance forward kernel serves both passes ("duality ... to reduce
+number of code generators").
+
+Scenario 1 (stride == 1):       W'[r',s',k,c] = W[R-1-r', S-1-s', c, k]
+                                dI = conv(dO, W', pad = R-1-pad)
+Scenario 2 (R == S == 1):       dI[:, ::stride, ::stride] = conv(dO, W^T)
+Generic (stride>1 and R,S>1):   dilate dO by stride, then scenario 1 —
+                                the small-GEMM fallback of Algorithm 7,
+                                expressed as one more forward conv.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def transform_weights(w):
+    """W (R,S,C,K) -> W' (R,S,K,C): KC-transpose + RS-flip."""
+    return jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)
+
+
+def dilate(x, stride: int):
+    """Insert stride-1 zeros between spatial elements of x (N,P,Q,K)."""
+    if stride == 1:
+        return x
+    n, p, q, k = x.shape
+    out = jnp.zeros((n, (p - 1) * stride + 1, (q - 1) * stride + 1, k),
+                    dtype=x.dtype)
+    return out.at[:, ::stride, ::stride, :].set(x)
+
+
+def bwd_data_plan(*, r: int, s: int, stride: int, padding: int,
+                  input_hw: tuple[int, int]):
+    """Return (scenario, fwd-conv parameters) implementing dI = dual-fwd.
+
+    The returned plan is consumed by ``core.conv.conv2d_bwd_data_via_fwd``
+    which runs the *forward* kernel.  scenario ∈ {"stride1", "1x1", "generic"}.
+    """
+    if stride == 1:
+        return ("stride1", dict(stride=1, padding=r - 1 - padding))
+    if r == 1 and s == 1:
+        return ("1x1", dict(stride=1, padding=0))
+    return ("generic", dict(stride=1, padding=r - 1 - padding))
+
+
+def prepare_bwd_data(do, w, *, stride: int, padding: int,
+                     input_hw: tuple[int, int]):
+    """Transform (dO, W) so a plain forward conv yields dI.
+
+    Returns (do', w', fwd_kwargs, post) where post(y) -> dI.
+    """
+    r, s, c, k = w.shape
+    h, wdt = input_hw
+    scenario, kw = bwd_data_plan(r=r, s=s, stride=stride, padding=padding,
+                                 input_hw=input_hw)
+    wt = transform_weights(w)
+
+    def fit(y):
+        """Pad-with-zeros/crop y to the exact (h, wdt) input plane — rows
+        beyond the receptive field carry zero gradient."""
+        pad_h = max(h - y.shape[1], 0)
+        pad_w = max(wdt - y.shape[2], 0)
+        y = jnp.pad(y, ((0, 0), (0, pad_h), (0, pad_w), (0, 0)))
+        return y[:, :h, :wdt, :]
+
+    if scenario == "stride1":
+        return do, wt, kw, fit
+    if scenario == "1x1":
+        p, q = do.shape[1], do.shape[2]
+
+        def post(y):
+            n = y.shape[0]
+            out = jnp.zeros((n, h, wdt, c), dtype=y.dtype)
+            return out.at[:, :(p - 1) * stride + 1:stride,
+                          :(q - 1) * stride + 1:stride, :].set(y)
+        return do, wt, kw, post
+    # Generic: dilate dO, then it is the stride-1 dual.  When the forward
+    # conv floored ((h + 2p - r) % stride != 0) the dual needs *asymmetric*
+    # padding — pre-pad explicitly and run the kernel pad-free.
+    p, q = do.shape[1], do.shape[2]
+    dod = dilate(do, stride)
+    top = r - 1 - padding
+    left = s - 1 - padding
+    assert top >= 0 and left >= 0, "padding > filter-1 unsupported"
+    bottom = max(h + padding - (p - 1) * stride - 1, 0)
+    right = max(wdt + padding - (q - 1) * stride - 1, 0)
+    dod = jnp.pad(dod, ((0, 0), (top, bottom), (left, right), (0, 0)))
+    return dod, wt, dict(stride=1, padding=0), fit

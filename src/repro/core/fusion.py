@@ -1,0 +1,88 @@
+"""Layer-fusion pattern matching (paper §II-G + GxM graph optimization).
+
+Walks the network list and collapses bandwidth-bound L() operators
+(BatchNorm-apply, bias, eltwise-add, ReLU) into the producing convolution's
+fused epilogue whenever the intermediate tensor has a single consumer — the
+"apply L() while the sub-tensor is hot in cache" rule.  This is the pass the
+paper says vendor libraries lacked; here it is a first-class graph pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    op: str                 # conv / bn / relu / add / pool / fc / ...
+    inputs: list
+    attrs: dict
+    fused: list = dataclasses.field(default_factory=list)  # fused L() ops
+
+
+def consumers(nodes, name):
+    return [n for n in nodes if name in n.inputs]
+
+
+FUSABLE = ("bn", "bias", "relu", "add")
+
+
+def fuse_network(nodes: list[Node]) -> list[Node]:
+    """Greedy single-consumer chain fusion into conv epilogues.
+
+    conv -> bn -> relu                  => conv{bn,relu}
+    conv -> bn -> add(skip) -> relu     => conv{bn,residual,relu}
+    conv -> bias -> relu                => conv{bias,relu}
+    """
+    nodes = [dataclasses.replace(n, fused=list(n.fused)) for n in nodes]
+    by_name = {n.name: n for n in nodes}
+    dead: set[str] = set()
+
+    for n in nodes:
+        if n.op != "conv":
+            continue
+        cur = n
+        while True:
+            outs = [c for c in nodes if cur.name in c.inputs
+                    and c.name not in dead]
+            if len(outs) != 1:
+                break
+            nxt = outs[0]
+            if nxt.op not in FUSABLE:
+                break
+            if nxt.op == "add":
+                if any(f[0] == "add" for f in n.fused):
+                    break  # one residual input per epilogue
+                other = [i for i in nxt.inputs if i != cur.name]
+                if len(other) != 1:
+                    break
+                n.fused.append(("add", {"residual": other[0]}))
+                n.inputs.append(other[0])   # dependency for topo ordering
+            else:
+                n.fused.append((nxt.op, dict(nxt.attrs)))
+            dead.add(nxt.name)
+            # the fused conv now produces the fused chain's output name
+            n.attrs["output_name"] = nxt.name
+            cur = nxt
+
+    out = []
+    for n in nodes:
+        if n.name in dead:
+            continue
+        # rewire inputs that pointed at fused-away nodes
+        new_inputs = []
+        for i in n.inputs:
+            owner = next((m for m in nodes if m.attrs.get("output_name") == i
+                          and m.name not in dead), None)
+            new_inputs.append(owner.name if owner is not None else i)
+        n.inputs = new_inputs
+        out.append(n)
+    return out
+
+
+def fusion_stats(nl_before: list[Node], nl_after: list[Node]) -> dict:
+    return {
+        "nodes_before": len(nl_before),
+        "nodes_after": len(nl_after),
+        "ops_fused": len(nl_before) - len(nl_after),
+    }

@@ -1,0 +1,62 @@
+"""Reduced precision (paper §II-K, TPU serving edition).
+
+The paper's int16->int32 4VNNIW kernels halve the input bytes of the hot
+loop while keeping a 32-bit accumulator.  The serving-side analog: store
+weights int8 with per-output-channel scales, dequantize on the fly (XLA
+fuses the dequant into the consuming matmul), keep bf16/f32 math.  Decode
+is weight-bandwidth-bound, so the memory roofline term drops ~2x — same
+shape of win, new bottleneck (exactly the §III-B discussion: the output
+bytes don't shrink, so the speedup is < 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_leaf_dict(x):
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def quantize_int8(params, *, min_size: int = 1024):
+    """Per-output-channel symmetric int8 for matrices; small tensors stay
+    as-is.  Returns a tree where quantized leaves become {"q","s"} dicts."""
+    def leaf(p):
+        if p.ndim < 2 or p.size < min_size:
+            return p
+        scale = jnp.max(jnp.abs(p.astype(jnp.float32)),
+                        axis=tuple(range(p.ndim - 1))) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(p.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        return {"q": q, "s": scale.astype(jnp.float32)}
+    return jax.tree.map(leaf, params)
+
+
+def dequantize(qparams, dtype=jnp.bfloat16):
+    def leaf(x):
+        if _is_leaf_dict(x):
+            return (x["q"].astype(jnp.float32) * x["s"]).astype(dtype)
+        return x
+    return jax.tree.map(leaf, qparams, is_leaf=_is_leaf_dict)
+
+
+def quantized_specs(param_specs, params_or_shapes, *, min_size: int = 1024):
+    """Mirror the logical-axis spec tree onto the quantized structure."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def leaf(spec, p):
+        if p.ndim < 2 or p.size < min_size:
+            return spec
+        return {"q": spec, "s": spec[-1:]}
+    return jax.tree.map(leaf, param_specs, params_or_shapes, is_leaf=is_spec)
+
+
+def quantization_error(params, dtype=jnp.bfloat16):
+    """Max relative reconstruction error per leaf (test utility)."""
+    deq = dequantize(quantize_int8(params), dtype)
+    def err(a, b):
+        a = a.astype(jnp.float32); b = b.astype(jnp.float32)
+        return float(jnp.max(jnp.abs(a - b))
+                     / (jnp.max(jnp.abs(a)) + 1e-9))
+    return jax.tree.map(err, params, deq)

@@ -1,0 +1,103 @@
+"""Kernel streams — the paper's §II-H dryrun/replay framework, TPU-native.
+
+The paper records, per thread, the exact sequence of microkernel invocations
+(variant + input/weight/output sub-tensor offsets + fused-operator calls),
+run-length-encodes it into segments, and replays it branch-free.
+
+On TPU the replay engine is a single ``pallas_call`` whose grid walks a flat
+schedule; the offset streams are *scalar-prefetched* arrays consumed by the
+BlockSpec index_maps (``PrefetchScalarGridSpec``), and the per-step flags
+(zero-init / epilogue / fused-L()) are read from SMEM inside the kernel.  The
+paper's "prefetch arguments = next invocation's offsets" property (§II-E,
+Fig. 1) is what the Mosaic pipeliner derives automatically from the same
+streams: block (i+1) is fetched while block (i) computes.
+
+The *dryrun* phase below performs the Algorithm-4 loop nest on the host,
+records the streams, and RLE-encodes them into segments (Fig. 2); the
+*replay* phase is ``kernels/conv2d_streams.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Per-step flag bits (the "kernel variant / APPLY" column of Fig. 2).
+FLAG_INIT = 1       # first visit of this output tile: zero the accumulator
+FLAG_EPILOGUE = 2   # last visit: apply the fused L() and write back
+FLAG_RELU = 4       # L() includes ReLU
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSchedule:
+    """Flat replay schedule: one entry per microkernel invocation."""
+    n_ids: np.ndarray       # image index stream
+    kb_ids: np.ndarray      # output-feature block offset stream (w/o offsets)
+    pb_ids: np.ndarray      # output row-block offset stream (o offsets)
+    cb_ids: np.ndarray      # input-feature block offset stream (i offsets)
+    flags: np.ndarray       # per-step variant/fusion flags
+    segments: tuple         # RLE segments: (kind, start, length)
+    grid: tuple             # (n, k_b, p_b, c_b) loop bounds
+
+    def __len__(self):
+        return len(self.n_ids)
+
+
+def build_conv_schedule(*, n: int, k_b: int, p_b: int, c_b: int,
+                        order: str = "nkpc", relu: bool = False) -> ConvSchedule:
+    """Dryrun: walk the §II-A loop nest in `order` and record the streams.
+
+    `order` is a permutation of "nkpc" (minibatch, K-blocks, row-blocks,
+    C-blocks), c innermost or not — the §II-C loop-order choice.  C-block
+    steps for one output tile must be contiguous (the accumulator lives in
+    the output VMEM tile), so "c" must be the innermost dimension; other
+    orders trade weight-block vs input-plane reuse exactly as in the paper.
+    """
+    assert sorted(order) == sorted("nkpc"), order
+    assert order.endswith("c"), "C-blocks must be innermost (accumulator tile)"
+    bounds = {"n": n, "k": k_b, "p": p_b, "c": c_b}
+    dims = [bounds[d] for d in order]
+    idx = np.stack(np.meshgrid(*[np.arange(d) for d in dims], indexing="ij"),
+                   axis=-1).reshape(-1, 4)
+    cols = {d: idx[:, i] for i, d in enumerate(order)}
+    cb = cols["c"]
+    flags = np.zeros(len(idx), dtype=np.int32)
+    flags[cb == 0] |= FLAG_INIT
+    flags[cb == c_b - 1] |= FLAG_EPILOGUE
+    if relu:
+        flags[cb == c_b - 1] |= FLAG_RELU
+
+    segments = rle_segments(flags)
+    return ConvSchedule(
+        n_ids=cols["n"].astype(np.int32), kb_ids=cols["k"].astype(np.int32),
+        pb_ids=cols["p"].astype(np.int32), cb_ids=cb.astype(np.int32),
+        flags=flags, segments=tuple(segments), grid=(n, k_b, p_b, c_b))
+
+
+def rle_segments(flags: np.ndarray):
+    """Run-length encode the flag stream into (flag_value, start, length)
+    segments — the paper's CONV-STREAK / APPLY compression (Fig. 2)."""
+    segs = []
+    start = 0
+    for i in range(1, len(flags) + 1):
+        if i == len(flags) or flags[i] != flags[start]:
+            segs.append((int(flags[start]), start, i - start))
+            start = i
+    return segs
+
+
+def decode_segments(segs, total: int) -> np.ndarray:
+    """Inverse of rle_segments (used by tests + the executor)."""
+    out = np.zeros(total, dtype=np.int32)
+    for val, start, length in segs:
+        out[start:start + length] = val
+    return out
+
+
+def prefetch_streams(sched: ConvSchedule):
+    """The §II-E property: prefetch offsets at step i are the argument
+    offsets of step i+1 (the last step prefetches itself — a no-op)."""
+    def nxt(a):
+        return np.concatenate([a[1:], a[-1:]])
+    return (nxt(sched.n_ids), nxt(sched.kb_ids),
+            nxt(sched.pb_ids), nxt(sched.cb_ids))

@@ -1,0 +1,3 @@
+from repro.graph.topology import resnet50, inception_v3, RESNET50_LAYERS
+from repro.graph.etg import build_etg
+from repro.graph.executor import GxM

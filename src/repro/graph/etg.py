@@ -1,0 +1,94 @@
+"""Execution Task Graph construction — the GxM flow of paper Fig. 3.
+
+Parser -> NL  (topology.py builders)
+NL Extender   -> adds Split nodes for multi-consumer tensors (tensor
+                 distribution fwd / gradient reduction bwd)
+Fusion pass   -> conv-epilogue fusion (core.fusion)
+Dedupe        -> structurally identical conv shapes share one "kernel
+                 generator" entry (the paper's JIT cache)
+ETG           -> topologically ordered task list the executor runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.fusion import Node, fuse_network, fusion_stats
+
+
+@dataclasses.dataclass
+class ETG:
+    tasks: list            # topo-ordered Nodes
+    kernel_cache: dict     # conv signature -> cache id (dedup'd JIT entries)
+    stats: dict
+
+
+def extend_nl(nodes: list[Node]) -> list[Node]:
+    """NL Extender: insert explicit Split nodes where a tensor feeds >1
+    consumer (fwd: fan-out copy; bwd: gradient sum — autodiff handles the
+    reduction, the node marks the communication point for the scheduler)."""
+    out = []
+    for n in nodes:
+        out.append(n)
+        users = [m for m in nodes if n.name in m.inputs]
+        if len(users) > 1 and n.op not in ("input",):
+            split = Node(f"{n.name}_split", "split", [n.name],
+                         dict(fanout=len(users)))
+            out.append(split)
+            for u in users:
+                u.inputs = [f"{n.name}_split" if i == n.name else i
+                            for i in u.inputs]
+    return out
+
+
+def toposort(nodes: list[Node]) -> list[Node]:
+    by_name = {n.name: n for n in nodes}
+    alias = {}
+    for n in nodes:
+        if "output_name" in n.attrs:
+            alias[n.attrs["output_name"]] = n.name
+    resolved = lambda i: alias.get(i, i)
+    done, order, visiting = set(), [], set()
+
+    def visit(n):
+        if n.name in done:
+            return
+        if n.name in visiting:
+            raise ValueError(f"cycle at {n.name}")
+        visiting.add(n.name)
+        for i in n.inputs:
+            i = resolved(i)
+            if i in by_name:
+                visit(by_name[i])
+        visiting.discard(n.name)
+        done.add(n.name)
+        order.append(n)
+
+    for n in nodes:
+        visit(n)
+    return order
+
+
+def conv_signature(n: Node) -> tuple:
+    a = n.attrs
+    fused_kinds = tuple(k for k, _ in n.fused)
+    return (a["c"], a["k"], a["r"], a["s"], a["stride"], a["padding"],
+            fused_kinds)
+
+
+def build_etg(nl: list[Node], *, fuse: bool = True) -> ETG:
+    enl = extend_nl([dataclasses.replace(n, inputs=list(n.inputs),
+                                         attrs=dict(n.attrs),
+                                         fused=list(n.fused))
+                     for n in nl])
+    fused = fuse_network(enl) if fuse else enl
+    tasks = toposort(fused)
+    # Dedupe: one JIT "code generator" entry per distinct conv signature —
+    # the paper's answer to combinatorial kernel explosion.
+    cache: dict[tuple, int] = {}
+    for t in tasks:
+        if t.op == "conv":
+            sig = conv_signature(t)
+            cache.setdefault(sig, len(cache))
+            t.attrs["kernel_id"] = cache[sig]
+    return ETG(tasks=tasks, kernel_cache=cache,
+               stats=fusion_stats(enl, fused))

@@ -1,0 +1,189 @@
+"""GxM executor: runs an ETG forward (training or inference), with the
+backward/update passes coming from the conv tasks' custom VJPs (duality +
+update-pass kernels).  Functional: params are a pytree keyed by node name.
+
+Training-mode BatchNorm uses batch statistics (and contributes running-stat
+updates); inference mode folds BN into the conv epilogue (scale/shift) — the
+fused path the paper benchmarks.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conv import conv2d_train, conv2d_fwd
+from repro.graph.etg import ETG, build_etg
+
+
+def _maxpool(x, window, stride, padding):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1),
+        [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+
+
+class GxM:
+    """Graph execution model over an ETG."""
+
+    def __init__(self, nl, *, impl: str | None = None, fuse: bool = True,
+                 num_classes: int = 1000):
+        self.etg: ETG = build_etg(nl, fuse=fuse)
+        self.impl = impl
+        self.num_classes = num_classes
+
+    # -- parameter init -----------------------------------------------------
+    def init(self, rng, dtype=jnp.float32):
+        params = {}
+        for t in self.etg.tasks:
+            a = t.attrs
+            if t.op == "conv":
+                rng, k1 = jax.random.split(rng)
+                fan_in = a["c"] * a["r"] * a["s"]
+                w = jax.random.normal(k1, (a["r"], a["s"], a["c"], a["k"]),
+                                      dtype) * math.sqrt(2.0 / fan_in)
+                p = {"w": w}
+                for kind, attrs in t.fused:
+                    if kind == "bn":
+                        p["scale"] = jnp.ones((a["k"],), dtype)
+                        p["shift"] = jnp.zeros((a["k"],), dtype)
+                        p["mean"] = jnp.zeros((a["k"],), dtype)   # running
+                        p["var"] = jnp.ones((a["k"],), dtype)     # stats
+                    elif kind == "bias":
+                        p["bias"] = jnp.zeros((a["k"],), dtype)
+                params[t.name] = p
+            elif t.op == "bn":  # unfused BN
+                params[t.name] = {"scale": jnp.ones((a["k"],), dtype),
+                                  "shift": jnp.zeros((a["k"],), dtype),
+                                  "mean": jnp.zeros((a["k"],), dtype),
+                                  "var": jnp.ones((a["k"],), dtype)}
+            elif t.op == "fc":
+                rng, k1 = jax.random.split(rng)
+                w = jax.random.normal(k1, (a["c"], a["k"]), dtype) \
+                    * math.sqrt(1.0 / a["c"])
+                params[t.name] = {"w": w, "b": jnp.zeros((a["k"],), dtype)}
+        return params
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, params, x, *, train: bool = True,
+                collect_stats: bool = False):
+        """Inference folds the *running* BN statistics into the conv
+        epilogue (scale' = g/sqrt(var+eps), shift' = b - g*mean/sqrt(var+eps))
+        — the paper's §II-G fused-BN; training uses batch statistics and,
+        with ``collect_stats``, also returns them for the running update."""
+        tensors = {"input": x}
+        stats = {}
+
+        def get(name):
+            return tensors[name]
+
+        def folded(p):
+            inv = jax.lax.rsqrt(p["var"] + 1e-5)
+            return p["scale"] * inv, p["shift"] - p["scale"] * p["mean"] * inv
+
+        for t in self.etg.tasks:
+            a = t.attrs
+            if t.op == "input":
+                continue
+            elif t.op == "conv":
+                inp = get(t.inputs[0])
+                p = params[t.name]
+                kw = dict(stride=a["stride"], padding=a["padding"])
+                scale = shift = bias = residual = None
+                relu = False
+                for kind, attrs in t.fused:
+                    if kind == "bn":
+                        scale, shift = p["scale"], p["shift"]
+                    elif kind == "bias":
+                        bias = p["bias"]
+                    elif kind == "relu":
+                        relu = True
+                    elif kind == "add":
+                        residual = get(attrs["residual"])
+                if train:
+                    # training path: paper bwd pipeline via custom VJP;
+                    # normalization handled outside the kernel (batch stats)
+                    y = conv2d_train(inp, p["w"], a["stride"], a["padding"],
+                                     self.impl)
+                    if scale is not None:
+                        mu = y.mean(axis=(0, 1, 2))
+                        var = y.var(axis=(0, 1, 2))
+                        stats[t.name] = (mu, var)
+                        y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+                        y = y * scale + shift
+                    if bias is not None:
+                        y = y + bias
+                    if residual is not None:
+                        y = y + residual
+                    if relu:
+                        y = jnp.maximum(y, 0)
+                else:
+                    # inference: everything fused into the kernel epilogue,
+                    # BN folded from running stats
+                    if scale is not None:
+                        scale, shift = folded(p)
+                    y = conv2d_fwd(inp, p["w"], bias=bias, scale=scale,
+                                   shift=shift, residual=residual, relu=relu,
+                                   impl=self.impl, **kw)
+                out = y
+            elif t.op == "bn":
+                y = get(t.inputs[0])
+                p = params[t.name]
+                if train:
+                    mu = y.mean(axis=(0, 1, 2))
+                    var = y.var(axis=(0, 1, 2))
+                    stats[t.name] = (mu, var)
+                else:
+                    mu, var = p["mean"], p["var"]
+                out = (y - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] \
+                    + p["shift"]
+            elif t.op == "relu":
+                out = jnp.maximum(get(t.inputs[0]), 0)
+            elif t.op == "add":
+                out = get(t.inputs[0]) + get(t.inputs[1])
+            elif t.op == "split":
+                out = get(t.inputs[0])
+            elif t.op == "concat":
+                out = jnp.concatenate([get(i) for i in t.inputs], axis=-1)
+            elif t.op == "maxpool":
+                out = _maxpool(get(t.inputs[0]), a["window"], a["stride"],
+                               a["padding"])
+            elif t.op == "avgpool":
+                out = get(t.inputs[0]).mean(axis=(1, 2))
+            elif t.op == "fc":
+                p = params[t.name]
+                out = get(t.inputs[0]) @ p["w"] + p["b"]
+            else:
+                raise ValueError(f"unknown op {t.op}")
+            tensors[t.name] = out
+            if "output_name" in a:
+                tensors[a["output_name"]] = out
+        result = tensors[self.etg.tasks[-1].name]
+        if collect_stats:
+            return result, stats
+        return result
+
+    # -- loss / steps ---------------------------------------------------------
+    def loss(self, params, batch, *, train=True, collect_stats=False):
+        out = self.forward(params, batch["image"], train=train,
+                           collect_stats=collect_stats)
+        logits, stats = out if collect_stats else (out, None)
+        labels = jax.nn.one_hot(batch["label"], logits.shape[-1])
+        l = -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), -1))
+        if collect_stats:
+            return l, stats
+        return l
+
+    def sgd_train_step(self, params, batch, lr=0.1, *, bn_momentum=0.9):
+        (loss, stats), grads = jax.value_and_grad(
+            self.loss, has_aux=True)(params, batch, collect_stats=True)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        # running BN statistics (non-gradient state)
+        for name, (mu, var) in stats.items():
+            new[name]["mean"] = bn_momentum * new[name]["mean"] \
+                + (1 - bn_momentum) * mu
+            new[name]["var"] = bn_momentum * new[name]["var"] \
+                + (1 - bn_momentum) * var
+        return new, loss

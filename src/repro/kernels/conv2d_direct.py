@@ -1,0 +1,160 @@
+"""Direct-convolution forward Pallas kernel (paper §II-B..D,G adapted to TPU).
+
+TPU mapping of the paper's blocked direct convolution:
+
+  * ``VLEN`` feature-map blocking  -> channels live in the lane dimension
+    (NHWC / RSCK layouts, C and K innermost).
+  * register blocking ``RB_P x RB_Q`` -> an MXU M-tile of ``RB_P`` full output
+    rows (M = RB_P*Q), so each grid step is one "microkernel invocation"
+    computing an (RB_P*Q, K_blk) output tile.
+  * the (r, s, C_b) small-GEMM chain -> statically unrolled (r, s) loop of
+    ``jax.lax.dot_general`` calls over VMEM slices, f32 accumulation.
+  * layer fusion (§II-G)            -> bias / BN-scale-shift / residual-add /
+    ReLU epilogue fused into the same kernel, applied while the tile is in
+    VMEM ("hot in cache").
+  * two-level prefetch (§II-E)      -> the Mosaic grid pipeliner double-buffers
+    the next step's blocks automatically; grid order (N, K_b, P_b) keeps the
+    weight block resident across the P sweep (weight-stationary reuse).
+
+The spatial input plane is passed whole per image (it fits VMEM for every
+layer of the paper's Table I); strided row/column access inside the kernel
+uses strided ``pl.dslice``.  Inputs must be pre-padded (``pad_input``) so no
+in-kernel slice ever leaves the array — the bottom padding also covers the
+ceil-div grid tail, which is how the paper's "second kernel variant at the
+P/Q boundary" (§II-H) disappears on TPU: out-of-range output rows land in
+Pallas' masked out-of-bounds stores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class FuseSpec:
+    """Static description of the fused epilogue (paper §II-G L() operators)."""
+    bias: bool = False
+    bn: bool = False          # folded inference BN: scale * y + shift
+    residual: bool = False
+    relu: bool = False
+
+    def n_extra_args(self) -> int:
+        return int(self.bias) + 2 * int(self.bn) + int(self.residual)
+
+
+def pad_input(x, *, padding: int, stride: int, rb_p: int, r: int, p: int):
+    """Spatially pad x (N,H,W,C) for the kernel: `padding` on all sides plus
+    bottom slack so the ceil-div row grid never reads out of bounds."""
+    n, h, w, c = x.shape
+    p_b = math.ceil(p / rb_p)
+    rows_needed = ((p_b * rb_p - 1) * stride + r)        # last row touched + 1
+    pad_bottom = max(rows_needed - (h + 2 * padding), 0) + padding
+    return jnp.pad(x, ((0, 0), (padding, pad_bottom), (padding, padding), (0, 0)))
+
+
+def _kernel(x_ref, w_ref, *refs, fuse: FuseSpec, rb_p: int, q: int,
+            stride: int, r: int, s: int, accum_dtype, out_dtype):
+    """One microkernel invocation: an (rb_p*q, k_blk) output tile."""
+    idx = 0
+    bias_ref = scale_ref = shift_ref = res_ref = None
+    if fuse.bias:
+        bias_ref = refs[idx]; idx += 1
+    if fuse.bn:
+        scale_ref = refs[idx]; shift_ref = refs[idx + 1]; idx += 2
+    if fuse.residual:
+        res_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]
+
+    pb = pl.program_id(2)
+    c = x_ref.shape[-1]
+    k_blk = w_ref.shape[-1]
+    acc = jnp.zeros((rb_p * q, k_blk), dtype=accum_dtype)
+    row0 = pb * rb_p * stride
+    # The paper's perfectly-chained small-GEMM sequence over (r, s):
+    for rr in range(r):
+        for ss in range(s):
+            xs = x_ref[0, pl.dslice(row0 + rr, rb_p, stride),
+                       pl.dslice(ss, q, stride), :]          # (rb_p, q, c)
+            a = xs.reshape(rb_p * q, c)
+            wb = w_ref[rr, ss, :, :]                         # (c, k_blk)
+            acc += jax.lax.dot(a.astype(accum_dtype), wb.astype(accum_dtype),
+                               preferred_element_type=accum_dtype)
+    # Fused epilogue while the tile is hot in VMEM (§II-G).
+    if fuse.bn:
+        acc = acc * scale_ref[0, :].astype(accum_dtype)
+        acc = acc + shift_ref[0, :].astype(accum_dtype)
+    if fuse.bias:
+        acc = acc + bias_ref[0, :].astype(accum_dtype)
+    if fuse.residual:
+        acc = acc + res_ref[0].reshape(rb_p * q, k_blk).astype(accum_dtype)
+    if fuse.relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[0] = acc.reshape(rb_p, q, k_blk).astype(out_dtype)
+
+
+def conv2d_direct(x, w, *, stride: int = 1, padding: int = 0,
+                  bias=None, scale=None, shift=None, residual=None,
+                  relu: bool = False, rb_p: int = 8, k_blk: int | None = None,
+                  accum_dtype=jnp.float32, interpret: bool = False):
+    """Direct conv fwd.  x: (N,H,W,C), w: (R,S,C,K) -> (N,P,Q,K).
+
+    `rb_p` is the paper's RB_P register block (output rows per microkernel);
+    RB_Q is always the full row Q (Q fits the M-tile together with rb_p for
+    every shape we target).  `k_blk` is the output-feature block (paper: the
+    vectorized K_b loop); defaults to min(K, 128) = one MXU N-tile.
+    """
+    n, h, wdt, c = x.shape
+    r, s, _, k = w.shape
+    p = (h + 2 * padding - r) // stride + 1
+    q = (wdt + 2 * padding - s) // stride + 1
+    rb_p = min(rb_p, p)
+    if k_blk is None:
+        k_blk = min(k, 128)
+    assert k % k_blk == 0, (k, k_blk)
+
+    fuse = FuseSpec(bias=bias is not None, bn=scale is not None,
+                    residual=residual is not None, relu=relu)
+    if fuse.bn:
+        assert shift is not None
+
+    xp = pad_input(x, padding=padding, stride=stride, rb_p=rb_p, r=r, p=p)
+    hp, wp = xp.shape[1], xp.shape[2]
+    p_b = math.ceil(p / rb_p)
+    k_b = k // k_blk
+    grid = (n, k_b, p_b)
+
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, c), lambda ni, ki, pi: (ni, 0, 0, 0)),
+        pl.BlockSpec((r, s, c, k_blk), lambda ni, ki, pi: (0, 0, 0, ki)),
+    ]
+    args = [xp, w]
+    if fuse.bias:
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda ni, ki, pi: (0, ki)))
+        args.append(bias.reshape(1, k))
+    if fuse.bn:
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda ni, ki, pi: (0, ki)))
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda ni, ki, pi: (0, ki)))
+        args.extend([scale.reshape(1, k), shift.reshape(1, k)])
+    if fuse.residual:
+        in_specs.append(pl.BlockSpec((1, rb_p, q, k_blk),
+                                     lambda ni, ki, pi: (ni, pi, 0, ki)))
+        args.append(residual)
+
+    out_dtype = x.dtype
+    kern = functools.partial(_kernel, fuse=fuse, rb_p=rb_p, q=q,
+                             stride=stride, r=r, s=s,
+                             accum_dtype=accum_dtype, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, rb_p, q, k_blk),
+                               lambda ni, ki, pi: (ni, pi, 0, ki)),
+        out_shape=jax.ShapeDtypeStruct((n, p, q, k), out_dtype),
+        interpret=interpret,
+    )(*args)

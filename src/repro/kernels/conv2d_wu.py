@@ -1,0 +1,93 @@
+"""Weight-gradient ("update pass") Pallas kernel — paper §II-J / Algorithm 9.
+
+Each grid step computes the contribution of one (image, row-block) to a full
+(R, S, C, K_blk) weight-gradient tile: for every static (r, s) it performs the
+small GEMM  dW[r,s] += X_rs^T @ dO_tile  with M=C, N=K_blk, K=B_P*Q — the
+transpose-free analog of the paper's VLENxVLEN microkernel (on the MXU the
+contraction runs over the pixel block, so the "register blocking up to VLEN"
+becomes a (C, K_blk) accumulator tile resident in VMEM).
+
+Accumulation across (n, p_b) uses the Pallas revisiting-output pattern: the
+output block index is constant over the (n, p_b) sweep, the tile stays in
+VMEM, and we zero-init on the first visit.  The cross-chip part of the
+paper's §II-J reduction trade-off (shared dW vs. per-thread copies) lives in
+``core/wu_strategy.py``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.conv2d_direct import pad_input
+
+
+def _kernel(x_ref, do_ref, o_ref, *, b_p: int, q: int, stride: int,
+            r: int, s: int, accum_dtype):
+    n_i = pl.program_id(1)
+    pb = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(n_i == 0, pb == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    c = x_ref.shape[-1]
+    k_blk = do_ref.shape[-1]
+    g = do_ref[0].reshape(b_p * q, k_blk).astype(accum_dtype)
+    row0 = pb * b_p * stride
+    for rr in range(r):
+        for ss in range(s):
+            xs = x_ref[0, pl.dslice(row0 + rr, b_p, stride),
+                       pl.dslice(ss, q, stride), :]           # (b_p, q, c)
+            a = xs.reshape(b_p * q, c).astype(accum_dtype)
+            # dW[r,s] += A^T @ G : contract over the pixel block.
+            upd = jax.lax.dot_general(
+                a, g, (((0,), (0,)), ((), ())),
+                preferred_element_type=accum_dtype)           # (c, k_blk)
+            o_ref[rr, ss, :, :] += upd
+
+
+def conv2d_wu(x, do, *, stride: int = 1, padding: int = 0,
+              filter_rs: tuple[int, int], b_p: int = 7,
+              k_blk: int | None = None, accum_dtype=jnp.float32,
+              interpret: bool = False):
+    """dW (R,S,C,K) from x (N,H,W,C) and dO (N,P,Q,K).
+
+    `b_p` is the paper's B_P spatial blocking of the update pass; B_Q is the
+    full row.  Requires P % b_p == 0 (the blocking heuristic only proposes
+    divisors — the paper likewise picks blockings "depending on the layer
+    characteristics").
+    """
+    n, h, wdt, c = x.shape
+    _, p, q, k = do.shape
+    r, s = filter_rs
+    b_p = min(b_p, p)
+    assert p % b_p == 0, (p, b_p)
+    if k_blk is None:
+        k_blk = min(k, 128)
+    assert k % k_blk == 0
+
+    xp = pad_input(x, padding=padding, stride=stride, rb_p=b_p, r=r, p=p)
+    hp, wp = xp.shape[1], xp.shape[2]
+    p_b = p // b_p
+    k_b = k // k_blk
+    grid = (k_b, n, p_b)   # output tile constant over the (n, p_b) sweep
+
+    kern = functools.partial(_kernel, b_p=b_p, q=q, stride=stride, r=r, s=s,
+                             accum_dtype=accum_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda ki, ni, pi: (ni, 0, 0, 0)),
+            pl.BlockSpec((1, b_p, q, k_blk), lambda ki, ni, pi: (ni, pi, 0, ki)),
+        ],
+        out_specs=pl.BlockSpec((r, s, c, k_blk),
+                               lambda ki, ni, pi: (0, 0, 0, ki)),
+        out_shape=jax.ShapeDtypeStruct((r, s, c, k), accum_dtype),
+        interpret=interpret,
+    )(xp, do)
+    return out.astype(x.dtype)

@@ -1,0 +1,228 @@
+"""Analytic (napkin-math) roofline model per (arch × shape × mesh).
+
+Why this exists: XLA *CPU* ``cost_analysis()`` does not multiply while-loop
+bodies by trip count, so scan-over-layers models under-report FLOPs/bytes by
+~n_layers (verified: useful_ratio > 1 in the raw sweep).  The dry-run
+artifact remains the evidence that the program compiles, fits, and which
+collectives appear; the three roofline *terms* are computed here from the
+model config and sharding — the same napkin math the §Perf hypothesis loop
+uses.  All formulas per device per step.
+
+Conventions: bf16 activations/params (2B), f32 accumulators.  Ring
+collective on n participants moves 2(n-1)/n x payload for all-reduce,
+(n-1)/n for all-gather / reduce-scatter.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+BP = 2      # bytes per param / activation element (bf16)
+
+
+@dataclasses.dataclass
+class Terms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    breakdown: dict
+
+    @property
+    def dominant(self):
+        d = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(d, key=d.get)
+
+    @property
+    def step_time_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _ring(n, kind="ar"):
+    if n <= 1:
+        return 0.0
+    return (2 * (n - 1) / n) if kind == "ar" else ((n - 1) / n)
+
+
+def _mixer_flops_per_tok(cfg, mixer, ctx: float):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    if mixer == "attn":
+        proj = 2 * (d * nh * hd + 2 * d * nkv * hd + nh * hd * d)
+        attn = 4 * nh * hd * ctx            # QK^T + PV
+        return proj + attn
+    if mixer == "mamba":
+        di, ds = cfg.d_inner, cfg.d_state
+        dtr = max(cfg.d_model // 16, 1)
+        proj = 2 * (d * 2 * di + di * (dtr + 2 * ds) + dtr * di + di * d)
+        scan = 10 * di * ds                 # a,bx,recurrence,y-einsum
+        conv = 2 * cfg.d_conv * di
+        return proj + scan + conv
+    if mixer == "rwkv":
+        lora = 2 * (d * 64 + 64 * d)
+        proj = 2 * 5 * d * d + lora
+        wkv = 6 * d * (d // cfg.n_heads)    # state update + readout
+        return proj + wkv
+    raise ValueError(mixer)
+
+
+def _mlp_flops_per_tok(cfg, mlp):
+    d, dff = cfg.d_model, cfg.d_ff
+    if mlp == "dense":
+        return 2 * 3 * d * dff
+    if mlp == "moe":
+        k, cf = cfg.moe.top_k, cfg.moe.capacity_factor
+        return 2 * 3 * d * dff * k * cf + 2 * d * cfg.moe.n_experts
+    if mlp == "rwkv_cm":
+        return 2 * 2 * d * dff
+    raise ValueError(mlp)
+
+
+def fwd_flops_per_token(cfg, ctx: float) -> float:
+    reps = cfg.pattern_repeats
+    per_layer = sum(_mixer_flops_per_tok(cfg, mx, ctx)
+                    + _mlp_flops_per_tok(cfg, ml)
+                    for mx, ml in cfg.block_pattern)
+    return reps * per_layer
+
+
+def analytic_roofline(cfg, shape, *, chips: int, model_par: int,
+                      data_par: int, profile: str | None = None,
+                      quantized: bool = False) -> Terms:
+    profile = profile or cfg.sharding
+    d, v = cfg.d_model, cfg.vocab
+    p_total = cfg.param_count()
+    p_expert = cfg.expert_param_count()
+
+    if profile == "ddp":
+        # no tensor parallelism: batch over every axis, ZeRO-3 storage
+        data_par = chips
+        model_par_dense = 1
+        p_model_shard = p_total                    # params used per device
+        fsdp_par = chips
+    elif profile == "ep":
+        # dense parts data-parallel over every axis; experts on "model"
+        data_par = chips
+        model_par_dense = 1
+        p_model_shard = (p_total - p_expert) + p_expert / model_par
+        fsdp_par = data_par if cfg.fsdp else 1
+    else:
+        model_par_dense = model_par
+        p_model_shard = p_total / model_par
+        fsdp_par = data_par if cfg.fsdp else 1
+    p_shard = p_model_shard / fsdp_par             # params held per device
+
+    if shape.kind == "decode":
+        t_glob = shape.global_batch
+        ctx = shape.seq_len
+    else:
+        t_glob = shape.global_batch * shape.seq_len
+        ctx = shape.seq_len / 2                    # causal average
+    t_loc = t_glob / min(data_par, max(shape.global_batch, 1))
+    if shape.global_batch < data_par:              # batch unshardable
+        t_loc = t_glob
+
+    # ---------------- FLOPs -------------------------------------------------
+    fwd_tok = fwd_flops_per_token(cfg, ctx)
+    logits_tok = 2 * d * v
+    if shape.kind == "train":
+        # fwd + bwd(2x fwd) (+1x recompute under remat); logits no remat
+        blk_factor = 4 if cfg.remat else 3
+        flops_glob = t_glob * (blk_factor * fwd_tok + 3 * logits_tok)
+    else:
+        flops_glob = t_glob * (fwd_tok + logits_tok)
+    flops_dev = flops_glob / chips
+
+    # ---------------- HBM bytes --------------------------------------------
+    br = {}
+    accum = cfg.accum_steps if shape.kind == "train" else 1
+    wbytes = BP / 2 if quantized else BP           # int8 weights at serving
+    vocab_par = model_par_dense
+    # params: read for fwd (+recompute+bwd) per microbatch, plus optimizer
+    if shape.kind == "train":
+        br["params"] = (3 * accum) * p_model_shard * BP \
+            + 4 * p_shard * 4                      # adam read/write f32
+        # activations: ~20 d-wide tensors per layer per token (fwd+bwd)
+        br["acts"] = 20 * cfg.n_layers * (t_loc / accum) * d * BP * accum
+        br["logits"] = 3 * t_loc * (v / vocab_par) * BP
+        br["grads"] = 2 * p_shard * BP
+    elif shape.kind == "prefill":
+        br["params"] = p_model_shard * wbytes
+        br["acts"] = 8 * cfg.n_layers * t_loc * d * BP
+        br["logits"] = t_loc * (v / vocab_par) * BP
+        # KV cache write
+        n_attn = sum(mx == "attn" for mx, _ in cfg.block_pattern) \
+            * cfg.pattern_repeats
+        br["kv"] = 2 * n_attn * t_loc * cfg.n_kv_heads * cfg.head_dim * BP
+    else:  # decode
+        br["params"] = p_model_shard * wbytes
+        n_attn = sum(mx == "attn" for mx, _ in cfg.block_pattern) \
+            * cfg.pattern_repeats
+        b_loc = max(shape.global_batch / data_par, 1)
+        kv_line = cfg.n_kv_heads * cfg.head_dim * 2 * BP
+        seq_par = model_par if profile == "tp" else 1
+        br["kv"] = n_attn * b_loc * (shape.seq_len / seq_par) * kv_line
+        # recurrent states (ssm/wkv)
+        n_ssm = sum(mx in ("mamba", "rwkv") for mx, _ in cfg.block_pattern) \
+            * cfg.pattern_repeats
+        state = (cfg.d_inner * cfg.d_state if "mamba" in
+                 [m for m, _ in cfg.block_pattern] else d * cfg.head_dim)
+        br["state"] = 2 * n_ssm * b_loc * (state / seq_par) * 4
+        br["acts"] = 8 * cfg.n_layers * b_loc * d * BP
+        br["logits"] = b_loc * (v / vocab_par) * BP
+    hbm_dev = float(sum(br.values()))
+
+    # ---------------- Collectives ------------------------------------------
+    cb = {}
+    act_payload = t_loc * d * BP                    # per-device activations
+    n_blocks = cfg.n_layers
+    passes = (3 if cfg.remat else 2) if shape.kind == "train" else 1
+    if shape.kind == "train":
+        if profile == "ddp" or cfg.fsdp:
+            # ZeRO-3: reduce-scatter grads + all-gather params (fwd + bwd)
+            cb["zero_rs_grads"] = _ring(fsdp_par, "ag") * p_model_shard * BP
+            cb["zero_ag_params"] = 2 * _ring(fsdp_par, "ag") \
+                * p_model_shard * BP * accum
+        else:
+            cb["dp_grad_ar"] = _ring(data_par) * p_model_shard * BP
+    if profile == "tp":
+        # TP: 2 all-reduces per block x (fwd + recompute + bwd)
+        cb["tp_act_ar"] = passes * 2 * n_blocks * _ring(model_par) \
+            * act_payload
+    # MoE all-to-all (there and back), per moe layer
+    if cfg.moe is not None and profile in ("tp", "ep"):
+        n_moe = sum(ml == "moe" for _, ml in cfg.block_pattern) \
+            * cfg.pattern_repeats
+        a2a = 2 * n_moe * (t_loc * cfg.moe.top_k * cfg.moe.capacity_factor
+                           * d * BP)
+        cb["moe_a2a"] = a2a * passes * (model_par - 1) / model_par
+    wire_dev = float(sum(cb.values()))
+
+    return Terms(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=hbm_dev / HBM_BW,
+        collective_s=wire_dev / ICI_BW,
+        flops=flops_dev, hbm_bytes=hbm_dev, wire_bytes=wire_dev,
+        breakdown={"hbm": br, "wire": cb},
+    )
+
+
+def model_flops_global(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def mfu(cfg, shape, terms: Terms, chips: int) -> float:
+    """Useful-FLOPs utilization at the roofline step time."""
+    t = terms.step_time_s
+    if t == 0:
+        return 0.0
+    return model_flops_global(cfg, shape) / t / (PEAK_FLOPS * chips)

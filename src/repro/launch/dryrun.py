@@ -1,0 +1,244 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+record memory / cost / collective / roofline evidence.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+
+Writes one JSON per cell; --all skips cells whose JSON already exists
+(restartable — the driver itself is fault-tolerant).
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import backend as be                       # noqa: E402
+from repro.configs import SHAPES, get_config, list_archs, smoke_config  # noqa: E402
+from repro.configs.shapes import applicable, input_specs  # noqa: E402
+from repro.launch import roofline as rl               # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.nn import transformer as T                 # noqa: E402
+from repro.nn.partitioning import (activation_ctx, activation_rules,  # noqa: E402
+                                   batch_spec, cache_shardings,
+                                   param_rules, to_shardings)
+from repro.optim.adamw import AdamW                   # noqa: E402
+from repro.train.step import (make_decode_step, make_prefill_step,  # noqa: E402
+                              make_train_step, train_state_specs)
+
+
+def abstract_state(cfg, opt):
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(lambda k: T.init_lm(k, cfg)[0], key)
+    # spec tree structure is dim-independent: build it from the smoke config
+    _, specs = T.init_lm(key, smoke_config(cfg))
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    state_shapes = {"params": params_shapes, "opt": opt_shapes,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    return state_shapes, train_state_specs(specs, opt_shapes), params_shapes, specs
+
+
+def batch_shardings(batch_shapes, mesh):
+    out = {}
+    for k, v in batch_shapes.items():
+        trailing = (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, batch_spec(v.shape[0], mesh, trailing))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               sharding: str | None = None, accum: int | None = None,
+               quantize: bool = False, remat: str | None = None,
+               moe_cf: float | None = None):
+    cfg = get_config(arch)
+    overrides = {}
+    if sharding:
+        overrides["sharding"] = sharding
+    if accum:
+        overrides["accum_steps"] = accum
+    if remat is not None:
+        overrides["remat"] = remat == "on"
+    if moe_cf is not None and cfg.moe is not None:
+        overrides["moe"] = dataclasses.replace(cfg.moe,
+                                               capacity_factor=moe_cf)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "applicable": ok, "skip_reason": reason,
+           "sharding": cfg.sharding, "accum_steps": cfg.accum_steps,
+           "quantized": quantize}
+    if not ok:
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    opt = AdamW(factored=cfg.factored_opt,
+                state_dtype=jnp.bfloat16 if cfg.factored_opt else jnp.float32)
+    rules = param_rules(fsdp=cfg.fsdp, mesh=mesh, profile=cfg.sharding)
+    specs_in = input_specs(cfg, shape)
+
+    t0 = time.time()
+    act_rules = activation_rules(mesh, cfg.sharding)
+    with be.use_backend("xla"), activation_ctx(mesh, act_rules):
+        if shape.kind == "train":
+            state_shapes, state_spec, _, _ = abstract_state(cfg, opt)
+            state_sh = to_shardings(state_spec, state_shapes, rules, mesh)
+            step = make_train_step(cfg, opt, accum_steps=cfg.accum_steps)
+            bsh = batch_shardings(specs_in, mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, bsh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, specs_in)
+        elif shape.kind == "prefill":
+            _, _, params_shapes, pspecs = abstract_state(cfg, opt)
+            param_sh = to_shardings(pspecs, params_shapes, rules, mesh)
+            step = make_prefill_step(cfg, cache_len=shape.seq_len)
+            bsh = batch_shardings(specs_in, mesh)
+            jitted = jax.jit(step, in_shardings=(param_sh, bsh))
+            lowered = jitted.lower(params_shapes, specs_in)
+        else:  # decode
+            _, _, params_shapes, pspecs = abstract_state(cfg, opt)
+            if quantize:
+                from repro.core.quantize import (dequantize, quantize_int8,
+                                                 quantized_specs)
+                pspecs = quantized_specs(pspecs, params_shapes)
+                params_shapes = jax.eval_shape(quantize_int8, params_shapes)
+                base = make_decode_step(cfg)
+
+                def step(qp, tokens, cache, idx):
+                    return base(dequantize(qp, jnp.dtype(cfg.dtype)),
+                                tokens, cache, idx)
+            else:
+                step = make_decode_step(cfg)
+            param_sh = to_shardings(pspecs, params_shapes, rules, mesh)
+            cache_sh = cache_shardings(specs_in["cache"], mesh,
+                                       shape.global_batch)
+            tok_sh = NamedSharding(
+                mesh, batch_spec(shape.global_batch, mesh, (None,)))
+            idx_sh = NamedSharding(mesh, P())
+            jitted = jax.jit(step,
+                             in_shardings=(param_sh, tok_sh, cache_sh, idx_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shapes, specs_in["tokens"],
+                                   specs_in["cache"], specs_in["idx"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")}
+    mem["total_per_device_bytes"] = (
+        mem["argument_size_in_bytes"] + mem["output_size_in_bytes"]
+        + mem["temp_size_in_bytes"] - mem["alias_size_in_bytes"])
+    roof = rl.analyze(compiled, chips=chips,
+                      model_flops_global=rl.model_flops(cfg, shape))
+    rec.update({
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "roofline": rl.to_dict(roof),
+    })
+    print(compiled.memory_analysis())
+    return rec, compiled
+
+
+def run_cell(arch, shape_name, mesh_kind, outdir, save_hlo=False, tag="",
+             **kw):
+    suffix = f"__{tag}" if tag else ""
+    path = outdir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    out = lower_cell(arch, shape_name, mesh_kind == "multi", **kw)
+    rec, compiled = out if isinstance(out, tuple) else (out, None)
+    path.write_text(json.dumps(rec, indent=1))
+    if save_hlo and compiled is not None:
+        (outdir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.hlo.txt"
+         ).write_text(compiled.as_text())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sharding", choices=("tp", "ddp", "ep"), default=None,
+                    help="override the arch's sharding profile (§Perf)")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8 weights for decode cells (§II-K analog)")
+    ap.add_argument("--remat", choices=("on", "off"), default=None)
+    ap.add_argument("--moe-cf", type=float, default=None)
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (hillclimb variants)")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    cells = ([(a, s) for a in list_archs() for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+
+    failures = []
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            suffix = f"__{args.tag}" if args.tag else ""
+            path = outdir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+            if path.exists() and not args.force:
+                print(f"[skip-cached] {path.name}")
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(arch, shape_name, mesh_kind, outdir,
+                               args.save_hlo, tag=args.tag,
+                               sharding=args.sharding, accum=args.accum,
+                               quantize=args.quantize, remat=args.remat,
+                               moe_cf=args.moe_cf)
+                status = ("SKIP(" + rec["skip_reason"][:40] + ")"
+                          if not rec["applicable"] else
+                          f"ok compile={rec['compile_s']}s "
+                          f"dom={rec['roofline']['dominant']} "
+                          f"mem={rec['memory']['total_per_device_bytes']/2**30:.2f}GiB")
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape_name, mesh_kind, repr(e)))
+                path.with_suffix(".error.txt").write_text(
+                    traceback.format_exc())
+                status = f"FAIL {e!r}"
+            print(f"[{arch} × {shape_name} × {mesh_kind}] "
+                  f"{status} ({time.time()-t0:.0f}s)", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  python -m repro.launch.report [--dir experiments/dryrun] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def fmt_time(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.0f}us"
+    if s < 1:
+        return f"{s*1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def load(dirpath):
+    recs = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def mesh_dims(mesh):
+    return ((512, 32, 16) if mesh == "multi" else (256, 16, 16))
+
+
+def roofline_table(recs, mesh="single"):
+    """Analytic three-term roofline (primary; see launch/analytic.py for why
+    the XLA-CPU artifact numbers can't be used directly) merged with the
+    compiled artifact's memory + collective-schedule evidence."""
+    from repro.configs import SHAPES, get_config
+    from repro.launch import analytic as A
+    chips, dp, mp = mesh_dims(mesh)
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if not r["applicable"]:
+            rows.append((r["arch"], r["shape"], "SKIP", "", "", "", "", "",
+                         r["skip_reason"][:48]))
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        t = A.analytic_roofline(cfg, shape, chips=chips, model_par=mp,
+                                data_par=dp)
+        rows.append((
+            r["arch"], r["shape"],
+            fmt_time(t.compute_s), fmt_time(t.memory_s),
+            fmt_time(t.collective_s), t.dominant,
+            f"{A.mfu(cfg, shape, t, chips):.3f}",
+            r["roofline"]["collective_count"],
+            f"{r['memory']['total_per_device_bytes']/2**30:.1f}GiB",
+        ))
+    hdr = ("arch", "shape", "compute", "memory", "collective", "dominant",
+           "MFU@roofline", "n_coll(HLO)", "mem/dev")
+    return hdr, rows
+
+
+def to_markdown(hdr, rows):
+    out = ["| " + " | ".join(hdr) + " |",
+           "|" + "|".join("---" for _ in hdr) + "|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(out)
+
+
+def dryrun_table(recs):
+    out = []
+    for r in recs:
+        if not r["applicable"]:
+            continue
+        m = r["memory"]
+        rf = r["roofline"]
+        out.append((r["arch"], r["shape"], r["mesh"], r["chips"],
+                    f"{m['total_per_device_bytes']/2**30:.2f}",
+                    f"{rf['flops_per_device']/1e12:.2f}",
+                    f"{rf['collective_wire_bytes']/2**20:.1f}",
+                    rf["collective_count"], f"{r['compile_s']:.0f}s"))
+    hdr = ("arch", "shape", "mesh", "chips", "GiB/dev", "TFLOP/dev",
+           "coll MiB/dev", "n_coll", "compile")
+    return hdr, out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kind", choices=("roofline", "dryrun"),
+                    default="roofline")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.kind == "roofline":
+        hdr, rows = roofline_table(recs, args.mesh)
+    else:
+        hdr, rows = dryrun_table(recs)
+    print(to_markdown(hdr, rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Three-term roofline extraction from compiled dry-run artifacts.
+
+  compute_s    = HLO_FLOPs_per_device / peak_FLOPs
+  memory_s     = HLO_bytes_per_device / HBM_bw        (XLA "bytes accessed":
+                 an upper bound on HBM traffic — fused ops count once)
+  collective_s = Σ_ops per-device payload × ring_factor / link_bw
+
+``cost_analysis()`` values on a partitioned module are already per-device.
+Collective payloads are parsed from the compiled HLO: the result shape of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute is the per-device shard; ring_factor(n) = 2(n-1)/n for
+all-reduce, (n-1)/n otherwise.
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+# "%name = <shape or (tuple)> <collective>(" — shape first on RHS
+_LINE = re.compile(
+    r"=\s+(\([^)]*\)|\S+)\s+(" + "|".join(_COLL) + r")(?:-start)?\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V2.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_bytes: float       # Σ payload shards
+    wire_bytes: float             # Σ payload × ring factor
+    by_kind: dict
+    count: int
+
+
+def parse_collectives(hlo_text: str, *, default_group: int) -> CollectiveStats:
+    per_dev = 0.0
+    wire = 0.0
+    by_kind: dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _LINE.search(line)
+        if not m:
+            continue
+        shape_s, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_s)
+        if b == 0:
+            continue
+        n = max(_group_size(line, default_group), 2)
+        factor = 2 * (n - 1) / n if kind == "all-reduce" else (n - 1) / n
+        per_dev += b
+        wire += b * factor
+        by_kind[kind] = by_kind.get(kind, 0.0) + b
+        count += 1
+    return CollectiveStats(per_dev, wire, by_kind, count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collectives: CollectiveStats
+    model_flops_global: float
+    useful_ratio: float           # MODEL_FLOPS / (HLO_FLOPs × chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs MFU at the roofline step time."""
+        if self.step_time_s == 0:
+            return 0.0
+        chips_flops = self.model_flops_global / self.step_time_s
+        return chips_flops / (PEAK_FLOPS * self._chips)
+
+    _chips: int = 256
+
+
+def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text(), default_group=chips)
+    r = Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_acc / HBM_BW,
+        collective_s=colls.wire_bytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=bytes_acc,
+        collectives=colls,
+        model_flops_global=model_flops_global,
+        useful_ratio=(model_flops_global / (flops * chips)
+                      if flops else 0.0),
+    )
+    r._chips = chips
+    return r
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for inference
+    forward (D = tokens processed)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def to_dict(r: Roofline) -> dict:
+    return {
+        "compute_s": r.compute_s,
+        "memory_s": r.memory_s,
+        "collective_s": r.collective_s,
+        "dominant": r.dominant,
+        "step_time_s": r.step_time_s,
+        "flops_per_device": r.flops_per_device,
+        "bytes_per_device": r.bytes_per_device,
+        "collective_per_device_bytes": r.collectives.per_device_bytes,
+        "collective_wire_bytes": r.collectives.wire_bytes,
+        "collective_count": r.collectives.count,
+        "collective_by_kind": r.collectives.by_kind,
+        "model_flops_global": r.model_flops_global,
+        "useful_ratio": r.useful_ratio,
+        "roofline_fraction": r.roofline_fraction,
+    }

@@ -1,0 +1,113 @@
+"""End-to-end trainer.
+
+The same code path drives the CPU examples (tiny configs, host mesh) and
+the production lowering (full configs, 16x16 / 2x16x16 mesh): model init ->
+sharded train_step -> resilient loop (async checkpoints, restore-on-failure)
+-> metrics.
+
+  python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.data import make_pipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.nn import transformer as T
+from repro.nn.partitioning import (activation_ctx, activation_rules,
+                                   batch_spec, param_rules, to_shardings)
+from repro.optim.adamw import AdamW
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault_tolerance import ResilientLoop
+from repro.train.step import (init_train_state, make_train_step,
+                              train_state_specs)
+
+
+def build(cfg, mesh, *, lr=3e-4, accum_steps=1, seed=0, impl=None):
+    opt = AdamW(factored=cfg.factored_opt,
+                state_dtype=jnp.bfloat16 if cfg.factored_opt else jnp.float32)
+    rules = param_rules(fsdp=cfg.fsdp, mesh=mesh)
+    state, param_specs = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+    spec_tree = train_state_specs(param_specs, state["opt"])
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    state_sh = to_shardings(spec_tree, shapes, rules, mesh)
+    state = jax.device_put(state, state_sh)
+    step = make_train_step(cfg, opt, lr=lr, accum_steps=accum_steps,
+                           impl=impl)
+
+    def data_sharding(batch):
+        return {k: NamedSharding(
+            mesh, batch_spec(v.shape[0], mesh, (None,) * (v.ndim - 1)))
+            for k, v in batch.items()}
+
+    jitted = jax.jit(step, donate_argnums=(0,),
+                     out_shardings=(state_sh, None))
+    act_rules = activation_rules(mesh)
+
+    def run_step(state, batch):
+        sh = data_sharding(batch)
+        batch = jax.device_put(batch, sh)
+        with activation_ctx(mesh, act_rules):
+            return jitted(state, batch)
+
+    return state, run_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--data-path", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh(model=args.model_parallel))
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)}")
+
+    state, run_step = build(cfg, mesh, lr=args.lr,
+                            accum_steps=args.accum_steps)
+    data = make_pipeline(cfg, seq_len=args.seq_len,
+                         global_batch=args.global_batch,
+                         path=args.data_path)
+
+    start = ckpt_lib.latest_step(args.ckpt_dir) or 0
+    if start:
+        print(f"resuming from checkpoint step {start}")
+        state = ckpt_lib.restore(args.ckpt_dir, start, state)
+
+    loop = ResilientLoop(step_fn=run_step, state=state, data=data,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    t0 = time.time()
+    loop.run(args.steps, start_step=start)
+    dt = time.time() - t0
+    toks = (args.steps - start) * args.global_batch * args.seq_len
+    for m in loop.metrics_log[:3] + loop.metrics_log[-3:]:
+        print(json.dumps(m))
+    print(f"tokens/s={toks/dt:.0f}  restarts={loop.restarts}")
+    return loop
+
+
+if __name__ == "__main__":
+    main()

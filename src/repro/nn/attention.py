@@ -1,0 +1,106 @@
+"""GQA attention (optional QKV bias, qk-norm) with train, prefill and
+decode paths.  Train/prefill use the blocked flash kernel (ops.attention);
+decode is the memory-bound KV-cache GEMV, left to XLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.nn.common import apply_rope, dense_init, rms_norm
+from repro.nn.partitioning import constrain
+
+
+def init(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, nh * hd), ("embed", "heads"), dtype=dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], (d, nkv * hd), ("embed", "kv_heads"), dtype=dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], (d, nkv * hd), ("embed", "kv_heads"), dtype=dtype)
+    p["wo"], s["wo"] = dense_init(ks[3], (nh * hd, d), ("heads", "embed"), dtype=dtype)
+    if cfg.qkv_bias:
+        for nm, width in (("bq", nh * hd), ("bk", nkv * hd), ("bv", nkv * hd)):
+            p[nm] = jnp.zeros((width,), dtype)
+            s[nm] = ("heads" if nm == "bq" else "kv_heads",)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype); s["q_norm"] = (None,)
+        p["k_norm"] = jnp.ones((hd,), dtype); s["k_norm"] = (None,)
+    return p, s
+
+
+def _project(p, cfg, x):
+    b, l, d = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, l, nkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, nkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], eps=cfg.norm_eps)
+    q = constrain(q, ("batch", "heads", "seq", None))
+    k = constrain(k, ("batch", "kv_heads", "seq", None))
+    v = constrain(v, ("batch", "kv_heads", "seq", None))
+    return q, k, v
+
+
+def apply(p, cfg, x, positions, *, impl=None, return_kv: bool = False):
+    """Full-sequence causal attention.  x: (B,L,D)."""
+    b, l, _ = x.shape
+    q, k, v = _project(p, cfg, x)
+    q = apply_rope(q, positions[:, None, :], theta=cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], theta=cfg.rope_theta)
+    o = ops.attention(q, k, v, causal=True, impl=impl)
+    o = constrain(o, ("batch", "heads", "seq", None))
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, cfg.n_heads * cfg.head_dim)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode(p, cfg, x, cache_kv, idx):
+    """One-token decode.  x: (B,1,D); cache_kv = (K,V) with K/V
+    (B,nkv,S,dh); idx: current position — scalar int32 (lockstep batch) or
+    (B,) int32 (continuous batching: per-lane positions).  Returns
+    (out (B,1,D), new cache)."""
+    b = x.shape[0]
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ck, cv = cache_kv
+    s = ck.shape[2]
+    per_lane = jnp.ndim(idx) == 1
+    pos = (idx[:, None].astype(jnp.int32) if per_lane
+           else jnp.full((b, 1), idx, dtype=jnp.int32))
+    q, k, v = _project(p, cfg, x)
+    q = apply_rope(q, pos[:, None, :], theta=cfg.rope_theta)
+    k = apply_rope(k, pos[:, None, :], theta=cfg.rope_theta)
+    if per_lane:
+        upd = jax.vmap(lambda c, kk, ii: jax.lax.dynamic_update_slice(
+            c, kk, (0, ii, 0)))
+        ck = upd(ck, k.astype(ck.dtype), idx)
+        cv = upd(cv, v.astype(cv.dtype), idx)
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, idx, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, idx, 0))
+    ck = constrain(ck, ("batch", "kv_heads", "seq_kv", None))
+    cv = constrain(cv, ("batch", "kv_heads", "seq_kv", None))
+    rep = nh // nkv
+    qg = q.reshape(b, nkv, rep, hd)                       # (B,nkv,rep,dh)
+    logits = jnp.einsum("bgrd,bgsd->bgrs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (hd ** -0.5)
+    bound = idx[:, None, None, None] if per_lane else idx
+    mask = jnp.arange(s)[None, None, None, :] <= bound
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bgrs,bgsd->bgrd", probs, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, nh * hd).astype(x.dtype)
+    return o @ p["wo"], (ck, cv)

@@ -1,0 +1,58 @@
+"""Shared NN primitives: norms, rotary embeddings, init helpers.
+
+Params are plain dicts; every init function returns ``(params, specs)``
+where ``specs`` mirrors the param tree with tuples of *logical* axis names
+("embed", "heads", "mlp", "vocab", "expert", ...).  The mesh layer maps
+logical names to physical mesh axes via per-config rules (MaxText-style),
+so sharding strategy changes are config edits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype), ("embed",)
+
+
+def dense_init(key, shape, logical_axes, *, scale=None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype) * scale), logical_axes
+
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, *, theta: float = 1e4):
+    """x: (..., L, Dh), positions: (..., L) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                           # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def softmax_xent(logits, labels, *, z_loss: float = 0.0):
+    """Mean token cross-entropy; labels == -1 are masked out."""
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    loss = (logz - gold) * mask
+    if z_loss:
+        loss = loss + z_loss * (logz ** 2) * mask
+    return loss.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,134 @@
+"""Mamba selective-SSM mixer (Jamba's attention-free layer).
+
+The depthwise causal conv1d here is the one convolution on an assigned
+architecture's hot path — it runs through the paper-style direct kernel
+(``kernels/conv1d_causal.py``).
+
+Selective scan: h_t = a_t ⊙ h_{t-1} + b_t with data-dependent a_t, b_t.
+Implemented as a *chunked* scan (``lax.scan`` over chunks carrying h,
+``associative_scan`` within a chunk) so the per-token (d_inner, d_state)
+state tensor is only materialized for ``scan_chunk`` tokens at a time — the
+cache-blocking idea of §II-C applied to a recurrence.  Decode is the O(1)
+single-step update (what makes long_500k runnable for ssm/hybrid archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.nn.common import dense_init
+from repro.nn.partitioning import constrain
+
+
+def init(key, cfg, dtype):
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = dense_init(ks[0], (d, 2 * di), ("embed", "inner"), dtype=dtype)
+    p["conv_w"] = jax.random.normal(ks[1], (dc, di), dtype) * (dc ** -0.5)
+    s["conv_w"] = (None, "inner")
+    p["conv_b"] = jnp.zeros((di,), dtype); s["conv_b"] = ("inner",)
+    p["x_proj"], s["x_proj"] = dense_init(ks[2], (di, dt_rank + 2 * ds), ("inner", None), dtype=dtype)
+    p["dt_proj"], s["dt_proj"] = dense_init(ks[3], (dt_rank, di), (None, "inner"), dtype=dtype)
+    p["dt_bias"] = jnp.zeros((di,), dtype); s["dt_bias"] = ("inner",)
+    p["A_log"] = jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))).astype(dtype)
+    s["A_log"] = ("inner", None)
+    p["D"] = jnp.ones((di,), dtype); s["D"] = ("inner",)
+    p["out_proj"], s["out_proj"] = dense_init(ks[4], (di, d), ("inner", "embed"), dtype=dtype)
+    return p, s
+
+
+def _ssm_inputs(p, cfg, xc):
+    """xc: post-conv activations (B,L,di) -> (a, bx, C) for one chunk.
+    Only ever called on chunk-sized slices (decode: L=1) so the
+    (B, chunk, di, ds) tensors stay small."""
+    d = cfg.d_model
+    ds = cfg.d_state
+    dt_rank = max(d // 16, 1)
+    xc = constrain(xc, ("batch", "seq", "inner"))
+    proj = xc @ p["x_proj"]                                    # (B,L,r+2s)
+    dt_low, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B,L,di)
+    a_cont = -jnp.exp(p["A_log"].astype(jnp.float32))           # (di,ds)
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * a_cont)     # (B,L,di,ds)
+    bx = (dt[..., None] * bmat[:, :, None, :]).astype(jnp.float32) \
+        * xc[..., None].astype(jnp.float32)                     # (B,L,di,ds)
+    a = constrain(a, ("batch", "seq", "inner", None))
+    bx = constrain(bx, ("batch", "seq", "inner", None))
+    return a, bx, cmat
+
+
+def _fused_chunk_scan(p, cfg, xc, h0, chunk: int):
+    """Chunked selective scan with the (di, ds) state tensors folded INTO
+    the rematerialized chunk body: per-token state is only ever live for
+    one chunk (the §II-C cache-blocking idea applied to a recurrence).
+    Saves per chunk: the (B, chunk, di) input slice + the (B, di, ds)
+    carry — never the (B, L, di, ds) tensors.
+    Returns (y (B,L,di) f32, h_T)."""
+    b, l, di = xc.shape
+    if l % chunk:
+        chunk = l
+    nc = l // chunk
+    xc_c = xc.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def body(h, xc_i):
+        a, bx, cmat = _ssm_inputs(p, cfg, xc_i)            # chunk-sized
+
+        def comb(x, y):
+            return (x[0] * y[0], y[0] * x[1] + y[1])
+        pa, pb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h_all = pa * h[:, None] + pb                       # (B,chunk,di,ds)
+        h_all = constrain(h_all, ("batch", "seq", "inner", None))
+        y = jnp.einsum("bcds,bcs->bcd", h_all,
+                       cmat.astype(jnp.float32))           # (B,chunk,di)
+        return h_all[:, -1], y
+
+    h_t, y_c = jax.lax.scan(body, h0, xc_c)
+    y = y_c.transpose(1, 0, 2, 3).reshape(b, l, di)
+    return y, h_t
+
+
+def apply(p, cfg, x, *, impl=None, return_state: bool = False):
+    """x: (B,L,D) -> (B,L,D).  Optionally returns (conv_state, ssm_state)."""
+    b, l, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = ops.conv1d(xi, p["conv_w"], bias=p["conv_b"], act="silu", impl=impl)
+    xc = constrain(xc, ("batch", "seq", "inner"))
+    h0 = constrain(jnp.zeros((b, di, cfg.d_state), jnp.float32),
+                   ("batch", "inner", None))
+    y, h_t = _fused_chunk_scan(p, cfg, xc, h0, cfg.scan_chunk)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ p["out_proj"]
+    if return_state:
+        conv_state = xi[:, -(cfg.d_conv - 1):, :]          # (B,dc-1,di)
+        return out, (conv_state.astype(x.dtype), h_t)
+    return out
+
+
+def decode(p, cfg, x, state):
+    """One-token decode.  x: (B,1,D); state = (conv_state (B,dc-1,di),
+    ssm_state (B,di,ds) f32)."""
+    conv_state, h = state
+    b = x.shape[0]
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                      # (B,1,di)
+    window = constrain(jnp.concatenate([conv_state, xi], axis=1),
+                       ("batch", None, "inner"))     # (B,dc,di)
+    xc = (window.astype(jnp.float32)
+          * p["conv_w"].astype(jnp.float32)[None]).sum(axis=1, keepdims=True)
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    a, bx, cmat = _ssm_inputs(p, cfg, xc)                  # L=1
+    h = a[:, 0] * h + bx[:, 0]                             # (B,di,ds)
+    h = constrain(h, ("batch", "inner", None))
+    y = jnp.einsum("bds,bs->bd", h, cmat[:, 0].astype(jnp.float32))[:, None]
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, (window[:, 1:, :], h)

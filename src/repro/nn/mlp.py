@@ -1,0 +1,44 @@
+"""MLP blocks: SwiGLU (dense LMs) and RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import dense_init
+from repro.nn.partitioning import constrain
+
+
+def init(key, cfg, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_gate"], s["w_gate"] = dense_init(ks[0], (d, dff), ("embed", "mlp"), dtype=dtype)
+    p["w_up"], s["w_up"] = dense_init(ks[1], (d, dff), ("embed", "mlp"), dtype=dtype)
+    p["w_down"], s["w_down"] = dense_init(ks[2], (dff, d), ("mlp", "embed"), dtype=dtype)
+    return p, s
+
+
+def apply(p, cfg, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    g = constrain(g, ("batch", "seq", "mlp"))
+    u = constrain(u, ("batch", "seq", "mlp"))
+    return (g * u) @ p["w_down"]
+
+
+def init_rwkv_cm(key, cfg, dtype):
+    d, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    p, s = {}, {}
+    p["mu_k"] = jnp.full((d,), 0.5, dtype); s["mu_k"] = ("embed",)
+    p["w_k"], s["w_k"] = dense_init(ks[0], (d, dff), ("embed", "mlp"), dtype=dtype)
+    p["w_v"], s["w_v"] = dense_init(ks[1], (dff, d), ("mlp", "embed"), dtype=dtype)
+    return p, s
+
+
+def apply_rwkv_cm(p, cfg, x, x_prev):
+    """RWKV channel mix.  x_prev is the token-shifted x (B,L,D)."""
+    xk = x + p["mu_k"] * (x_prev - x)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    k = constrain(k, ("batch", "seq", "mlp"))
+    return k @ p["w_v"]

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts MLP (top-k router, grouped capacity dispatch).
+
+GShard/Switch formulation with *dispatch groups*: tokens are grouped into
+contiguous chunks of ``group_size`` within their sequence, each group gets a
+local expert capacity C = S·k·cf/E, and dispatch/combine tensors are
+(G, S, E, C) — total memory linear in S, sharded over (data: G, model: E),
+with GSPMD inserting the all_to_all pair around the expert compute.
+
+The routing step is the paper's §II-H *dryrun* (it computes the offset
+streams); the per-expert SwiGLU is the *replay* — the Pallas streams-GMM
+(kernels/moe_gmm.py) is the single-chip version of the same schedule and is
+exercised in tests/benchmarks.
+
+Aux losses: load-balancing (Switch) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import dense_init
+from repro.nn.partitioning import constrain
+
+GROUP_SIZE = 512
+
+
+def init(key, cfg, dtype):
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], (d, e), ("embed", None), dtype=dtype)
+    p["w_gate"], s["w_gate"] = dense_init(
+        ks[1], (e, d, dff), ("expert", "embed", "mlp"), dtype=dtype)
+    p["w_up"], s["w_up"] = dense_init(
+        ks[2], (e, d, dff), ("expert", "embed", "mlp"), dtype=dtype)
+    p["w_down"], s["w_down"] = dense_init(
+        ks[3], (e, dff, d), ("expert", "mlp", "embed"), dtype=dtype)
+    return p, s
+
+
+def apply(p, cfg, x):
+    """x: (B,L,D) -> (out (B,L,D), aux losses dict)."""
+    b, l, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    s = min(GROUP_SIZE, l)
+    if l % s:
+        s = l
+    g = (b * l) // s
+    xg = x.reshape(g, s, d)
+
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)  # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (G,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(cfg.moe.capacity_factor * s * k / e), 1)
+
+    # --- dryrun: per-group dispatch streams ---------------------------------
+    combine = jnp.zeros((g, s, e, cap), dtype=jnp.float32)
+    dispatch = jnp.zeros((g, s, e, cap), dtype=jnp.float32)
+    counts = jnp.zeros((g, e), dtype=jnp.float32)          # queue fill
+    for slot in range(k):
+        onehot = jax.nn.one_hot(gate_idx[..., slot], e, dtype=jnp.float32)
+        pos_in_slot = jnp.cumsum(onehot, axis=1) - onehot  # (G,S,E)
+        pos = ((pos_in_slot + counts[:, None, :]) * onehot).sum(-1)
+        pos = pos.astype(jnp.int32)                        # (G,S)
+        keep = pos < cap
+        posc = jnp.minimum(pos, cap - 1)
+        mask = (onehot * keep[..., None])[..., None] \
+            * jax.nn.one_hot(posc, cap, dtype=jnp.float32)[..., None, :]
+        dispatch = dispatch + mask
+        combine = combine + mask * gate_vals[..., slot][..., None, None]
+        counts = counts + (onehot * keep[..., None]).sum(axis=1)
+
+    dispatch = dispatch.astype(x.dtype)                    # (G,S,E,C)
+    dispatch = constrain(dispatch, ("batch", "seq", "expert", None))
+    combine = constrain(combine, ("batch", "seq", "expert", None))
+    # --- replay: batched expert SwiGLU --------------------------------------
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)        # (G,E,C,D)
+    xe = constrain(xe, ("batch", "expert", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = constrain(h, ("batch", "expert", None, "mlp"))
+    u = constrain(u, ("batch", "expert", None, "mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h * u, p["w_down"])  # (G,E,C,D)
+    ye = constrain(ye, ("batch", "expert", None, None))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    # --- aux losses ---------------------------------------------------------
+    me = probs.mean(axis=(0, 1))                           # mean router prob
+    ce = jax.nn.one_hot(gate_idx[..., 0], e).mean(axis=(0, 1))
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out.reshape(b, l, d), {"lb_loss": lb_loss, "z_loss": z_loss}

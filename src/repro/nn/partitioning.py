@@ -1,0 +1,214 @@
+"""Logical-axis partitioning (MaxText-style rules) + activation sharding
+constraints.
+
+Every parameter leaf carries a tuple of logical axis names (see
+``nn/common.py``); a *rules* dict maps logical names to physical mesh axes.
+``to_shardings`` sanitizes the result per-leaf: a mesh axis is dropped when
+the dim is not divisible by its size, and duplicate mesh axes keep their
+first (highest-priority) occurrence — so one rule table serves every arch
+and both mesh shapes, with graceful per-tensor fallback to replication.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def sanitize_spec(axes, shape, mesh: Mesh):
+    """Drop non-dividing / duplicate mesh axes; returns a valid spec tuple."""
+    used = set()
+    out = []
+    for dim, axis in zip(shape, axes):
+        if axis is None:
+            out.append(None)
+            continue
+        flat = axis if isinstance(axis, (tuple, list)) else (axis,)
+        kept = []
+        size = 1
+        for a in flat:
+            if a in used:
+                continue
+            s = mesh.shape[a]
+            if dim % (size * s) == 0:
+                kept.append(a)
+                size *= s
+        for a in kept:
+            used.add(a)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return tuple(out)
+
+
+def spec_for(logical_axes, shape, rules: dict, mesh: Mesh) -> P:
+    axes = [rules.get(a) for a in logical_axes]
+    # pad in case logical tuple is shorter than rank (stacked layers etc.)
+    axes = list(axes) + [None] * (len(shape) - len(axes))
+    return P(*sanitize_spec(axes[:len(shape)], shape, mesh))
+
+
+def to_shardings(spec_tree, shape_tree, rules: dict, mesh: Mesh):
+    """specs (tuples of logical names) x shapes -> NamedSharding tree."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda s, shp: NamedSharding(mesh, spec_for(s, shp.shape, rules, mesh)),
+        spec_tree, shape_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+# GSPMD propagation loses shardings through scan/associative_scan bodies
+# (observed: Jamba's per-token SSM state replicating to TB/device).  Model
+# code calls ``constrain(x, logical_axes)`` at the key activation points;
+# it is a no-op unless a mesh context is active (tests and tiny runs are
+# unaffected).
+
+_ACT = {"mesh": None, "rules": None}
+
+
+@contextmanager
+def activation_ctx(mesh: Mesh, rules: dict):
+    prev = dict(_ACT)
+    _ACT["mesh"], _ACT["rules"] = mesh, rules
+    try:
+        yield
+    finally:
+        _ACT.update(prev)
+
+
+def constrain(x, logical_axes):
+    mesh, rules = _ACT["mesh"], _ACT["rules"]
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def activation_rules(mesh: Mesh, profile: str = "tp") -> dict:
+    """Logical activation axes -> mesh axes (merged with param rules).
+
+    Profiles (the §Perf sharding-strategy lever):
+      "tp"  — Megatron-style tensor parallel over "model" (default)
+      "ddp" — no tensor parallelism: batch over ALL axes, ZeRO-3 storage
+      "ep"  — expert-parallel only: experts on "model", everything else DP
+    """
+    dall = batch_axes(mesh) + ("model",)
+    if profile == "ddp":
+        return {"batch": dall, "seq": None, "seq_kv": None,
+                "embed_act": None, "heads": None, "kv_heads": None,
+                "mlp": None, "inner": None, "expert": None, "vocab": None,
+                None: None}
+    if profile == "ep":
+        return {"batch": dall, "seq": None, "seq_kv": None,
+                "embed_act": None, "heads": None, "kv_heads": None,
+                "mlp": None, "inner": None, "expert": "model",
+                "vocab": None, None: None}
+    return {
+        "batch": batch_axes(mesh),
+        "seq": None,
+        "seq_kv": "model",            # decode KV cache: sequence-parallel
+        "embed_act": None,            # activations replicated on embed dim
+        "heads": "model", "kv_heads": "model",
+        "mlp": "model", "inner": "model", "expert": "model",
+        "vocab": "model",
+        None: None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+def param_rules(*, fsdp: bool, mesh: Mesh, profile: str = "tp") -> dict:
+    """Weight sharding: tensor-parallel over "model"; optionally ZeRO-3/FSDP
+    over "data" (+"pod" when present) on the embed dim.  Profiles as in
+    ``activation_rules``."""
+    data_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if profile == "ddp":
+        # ZeRO-3 storage over every axis; no tensor parallelism
+        return {"embed": data_axes + ("model",), "heads": None,
+                "kv_heads": None, "mlp": None, "inner": None,
+                "expert": None, "vocab": None, "layers": None, None: None}
+    if profile == "ep":
+        return {"embed": data_axes if fsdp else None, "heads": None,
+                "kv_heads": None, "mlp": None, "inner": None,
+                "expert": "model", "vocab": None, "layers": None,
+                None: None}
+    fs = data_axes if fsdp else None
+    return {
+        "embed": fs,
+        "heads": "model", "kv_heads": "model",
+        "mlp": "model", "inner": "model",
+        "expert": "model",
+        "vocab": "model",
+        "layers": None,
+        None: None,
+    }
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec(global_batch: int, mesh: Mesh, trailing=(None,)) -> P:
+    """Shard the batch dim over (pod, data); fall back to replication when
+    the batch is too small (long_500k, batch 1)."""
+    axes = batch_axes(mesh)
+    size = 1
+    kept = []
+    for a in axes:
+        s = mesh.shape[a]
+        if global_batch % (size * s) == 0:
+            kept.append(a)
+            size *= s
+    lead = tuple(kept) if kept else None
+    if isinstance(lead, tuple) and len(lead) == 1:
+        lead = lead[0]
+    return P(lead, *trailing)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, global_batch: int):
+    """Decode-cache shardings: batch over data axes; KV sequence dim over
+    "model" (ring/sequence-parallel decode); ssm/wkv states shard the
+    feature dim over "model"."""
+    def leaf(shp):
+        shape = shp.shape
+        rank = len(shape)
+        axes = [None] * rank
+        # leading dim is always pattern-repeats (scan axis); batch is dim 1
+        b_ax = batch_axes(mesh)
+        size = 1
+        kept = []
+        for a in b_ax:
+            s = mesh.shape[a]
+            if shape[1] % (size * s) == 0:
+                kept.append(a)
+                size *= s
+        if kept:
+            axes[1] = tuple(kept) if len(kept) > 1 else kept[0]
+        if rank == 5:      # attn KV (reps, B, nkv, S, dh): shard S
+            if shape[3] % mesh.shape["model"] == 0:
+                axes[3] = "model"
+        elif rank >= 3:    # states (reps, B, feat, ...) : shard feat
+            if shape[2] % mesh.shape["model"] == 0:
+                axes[2] = "model"
+        return NamedSharding(mesh, P(*axes))
+    return jax.tree.map(leaf, cache_shapes)

@@ -1,0 +1,141 @@
+"""RWKV-6 (Finch) time-mix with data-dependent decay + channel mix.
+
+Attention-free: the WKV recurrence carries an (H, dh, dh) state —
+S_{t} = diag(w_t) S_{t-1} + k_t ⊗ v_t ;  y_t = (S_{t-1} + diag(u) k_t ⊗ v_t) r_t
+Training uses a chunked ``lax.scan`` over time; decode is the O(1) update
+(long_500k runs for this arch).  Token shift is a size-1 temporal shift —
+*not* a convolution (see DESIGN.md §5 on technique applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import dense_init
+from repro.nn.partitioning import constrain
+
+_LORA = 64
+
+
+def init(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    for i, nm in enumerate(("w_r", "w_k", "w_v", "w_g")):
+        p[nm], s[nm] = dense_init(ks[i], (d, d), ("embed", "heads"), dtype=dtype)
+    p["w_o"], s["w_o"] = dense_init(ks[4], (d, d), ("heads", "embed"), dtype=dtype)
+    # data-dependent decay LoRA (the Finch contribution)
+    p["w_dec_a"], s["w_dec_a"] = dense_init(ks[5], (d, _LORA), ("embed", None), dtype=dtype)
+    p["w_dec_b"], s["w_dec_b"] = dense_init(ks[6], (_LORA, d), (None, "heads"), dtype=dtype)
+    p["dec_bias"] = jnp.full((d,), -6.0, dtype); s["dec_bias"] = ("heads",)
+    for nm in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        p[nm] = jnp.full((d,), 0.5, dtype); s[nm] = ("embed",)
+    nh = cfg.n_heads
+    dh = d // nh
+    p["u"] = jnp.zeros((nh, dh), dtype); s["u"] = ("heads", None)
+    p["ln_x"] = jnp.ones((d,), dtype); s["ln_x"] = ("heads",)
+    return p, s
+
+
+def _mix(x, x_prev, mu):
+    return x + mu * (x_prev - x)
+
+
+def _proj_rkvgw(p, cfg, x, x_prev):
+    nh = cfg.n_heads
+    b, l, d = x.shape
+    dh = d // nh
+    r = _mix(x, x_prev, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, x_prev, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, x_prev, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, x_prev, p["mu_g"]) @ p["w_g"])
+    xw = _mix(x, x_prev, p["mu_w"])
+    dec = jnp.tanh(xw @ p["w_dec_a"]) @ p["w_dec_b"] + p["dec_bias"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))         # (B,L,D) in (0,1)
+    hshape = (b, l, nh, dh)
+    cons = lambda t: constrain(t.reshape(hshape),
+                               ("batch", "seq", "heads", None))
+    return (cons(r), cons(k), cons(v), g, cons(w))
+
+
+def _wkv_scan(r, k, v, w, u, s0, *, chunk: int = 64):
+    """Chunked WKV recurrence.  r,k,v,w: (B,L,H,dh) (w f32); u: (H,dh);
+    s0: (B,H,dh,dh) f32.  Returns (y (B,L,H,dh) f32, s_T).
+
+    The outer scan carries the (dh, dh) state once per *chunk*; the chunk
+    body (rematerialized) runs the per-token recurrence — so AD saves
+    O(L/chunk) states instead of O(L)."""
+    b, l, h, dh = r.shape
+    if l % chunk:
+        chunk = l
+    nc = l // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    seq = tuple(to_chunks(t.astype(jnp.float32)) for t in (r, k, v)) \
+        + (to_chunks(w),)
+
+    @jax.checkpoint
+    def chunk_body(s, inp):
+        rc, kc, vc, wc = inp                               # (B,chunk,H,dh)
+
+        def step(s, t):
+            rt, kt, vt, wt = t                             # (B,H,dh)
+            kv = kt[..., :, None] * vt[..., None, :]       # (B,H,dh,dh)
+            kv = constrain(kv, ("batch", "heads", None, None))
+            y = jnp.einsum("bhij,bhi->bhj",
+                           s + u[None, :, :, None] * kv, rt)
+            s = wt[..., None] * s + kv
+            s = constrain(s, ("batch", "heads", None, None))
+            return s, y
+
+        trans = lambda t: t.transpose(1, 0, 2, 3)          # (chunk,B,H,dh)
+        s, ys = jax.lax.scan(step, s, (trans(rc), trans(kc),
+                                       trans(vc), trans(wc)))
+        return s, ys.transpose(1, 0, 2, 3)
+
+    s_t, ys = jax.lax.scan(chunk_body, s0, seq)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, l, h, dh)
+    return y, s_t
+
+
+def apply(p, cfg, x, *, return_state: bool = False):
+    b, l, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, w = _proj_rkvgw(p, cfg, x, x_prev)
+    s0 = constrain(jnp.zeros((b, nh, dh, dh), jnp.float32),
+                   ("batch", "heads", None, None))
+    y, s_t = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), s0)
+    y = y.reshape(b, l, d)
+    # group-norm per head (ln_x), then gate and output-project
+    y = y.reshape(b, l, nh, dh)
+    y = (y - y.mean(-1, keepdims=True)) \
+        * jax.lax.rsqrt(y.var(-1, keepdims=True) + 1e-5)
+    y = y.reshape(b, l, d) * p["ln_x"].astype(jnp.float32)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    if return_state:
+        return out, (x[:, -1, :], s_t)
+    return out
+
+
+def decode(p, cfg, x, state):
+    """x: (B,1,D); state = (x_prev (B,D), s (B,H,dh,dh) f32)."""
+    xp_last, s = state
+    b, _, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    x_prev = xp_last[:, None, :]
+    r, k, v, g, w = _proj_rkvgw(p, cfg, x, x_prev)
+    rt, kt, vt, wt = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    u = p["u"].astype(jnp.float32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhij,bhi->bhj", s + u[None, :, :, None] * kv, rt)
+    s = wt[..., None] * s + kv
+    y = (y - y.mean(-1, keepdims=True)) \
+        * jax.lax.rsqrt(y.var(-1, keepdims=True) + 1e-5)
+    y = y.reshape(b, 1, d) * p["ln_x"].astype(jnp.float32)
+    out = (y.astype(x.dtype) * g) @ p["w_o"]
+    return out, (x[:, -1, :], s)

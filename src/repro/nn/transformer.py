@@ -1,0 +1,295 @@
+"""Decoder-only LM assembled from the mixer/MLP substrate.
+
+The layer stack is a ``lax.scan`` over *pattern repeats* (pattern entries
+unrolled inside the body) with optional remat — HLO size stays flat whether
+the model has 24 or 72 layers, which keeps the 512-device dry-run
+compilable.  Hybrid archs (Jamba: 1 attention + 7 Mamba per repeat, MoE on
+odd positions) are just longer patterns.
+
+Three entry points:
+  forward      — teacher-forced full sequence (train / prefill)
+  decode_step  — one token with unified cache (KV / conv+ssm / wkv states)
+  init_cache   — allocate the decode cache for a given (batch, max_len)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention, mamba, mlp, moe, rwkv
+from repro.nn.common import rms_norm, softmax_xent
+from repro.nn.partitioning import constrain
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, pos: int, dtype):
+    """One pattern-position layer: mixer + mlp + 2 norms."""
+    mixer, mlp_kind = cfg.block_pattern[pos]
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    if mixer == "attn":
+        p["mixer"], s["mixer"] = attention.init(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"], s["mixer"] = mamba.init(k1, cfg, dtype)
+    elif mixer == "rwkv":
+        p["mixer"], s["mixer"] = rwkv.init(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if mlp_kind == "dense":
+        p["mlp"], s["mlp"] = mlp.init(k2, cfg, dtype)
+    elif mlp_kind == "moe":
+        p["mlp"], s["mlp"] = moe.init(k2, cfg, dtype)
+    elif mlp_kind == "rwkv_cm":
+        p["mlp"], s["mlp"] = mlp.init_rwkv_cm(k2, cfg, dtype)
+    else:
+        raise ValueError(mlp_kind)
+    p["norm1"] = jnp.ones((cfg.d_model,), dtype); s["norm1"] = ("embed",)
+    p["norm2"] = jnp.ones((cfg.d_model,), dtype); s["norm2"] = ("embed",)
+    return p, s
+
+
+def init_lm(key, cfg):
+    """Returns (params, specs).  Block params are stacked over pattern
+    repeats (leading "layers" axis) for the scan."""
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 3)
+    params, specs = {}, {}
+    params["embed"] = jax.random.normal(
+        keys[0], (cfg.vocab, cfg.d_model), dtype) * 0.02
+    specs["embed"] = ("vocab", "embed")
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    specs["final_norm"] = ("embed",)
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), dtype) * 0.02
+        specs["head"] = ("embed", "vocab")
+
+    reps = cfg.pattern_repeats
+    blocks, bspecs = {}, {}
+    for pos in range(len(cfg.block_pattern)):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], pos), reps)
+        stacked = jax.vmap(lambda k: init_block(k, cfg, pos, dtype)[0])(bkeys)
+        _, spec = init_block(bkeys[0], cfg, pos, dtype)
+        blocks[str(pos)] = stacked
+        bspecs[str(pos)] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), spec,
+            is_leaf=lambda x: isinstance(x, tuple))
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, cfg, pos: int, x, positions, *, impl=None,
+                 collect_state: bool = False):
+    mixer, mlp_kind = cfg.block_pattern[pos]
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+    h = rms_norm(x, p["norm1"], eps=cfg.norm_eps)
+    if mixer == "attn":
+        if collect_state:
+            y, (k, v) = attention.apply(p["mixer"], cfg, h, positions,
+                                        impl=impl, return_kv=True)
+            state = {"k": k, "v": v}
+        else:
+            y = attention.apply(p["mixer"], cfg, h, positions, impl=impl)
+    elif mixer == "mamba":
+        if collect_state:
+            y, (cs, hs) = mamba.apply(p["mixer"], cfg, h, impl=impl,
+                                      return_state=True)
+            state = {"conv": cs, "ssm": hs}
+        else:
+            y = mamba.apply(p["mixer"], cfg, h, impl=impl)
+    else:  # rwkv
+        if collect_state:
+            y, (xp, sw) = rwkv.apply(p["mixer"], cfg, h, return_state=True)
+            state = {"x_prev": xp, "s": sw}
+        else:
+            y = rwkv.apply(p["mixer"], cfg, h)
+    x = x + y
+    h = rms_norm(x, p["norm2"], eps=cfg.norm_eps)
+    if mlp_kind == "dense":
+        y = mlp.apply(p["mlp"], cfg, h)
+    elif mlp_kind == "moe":
+        y, losses = moe.apply(p["mlp"], cfg, h)
+        aux = aux + 0.01 * losses["lb_loss"] + 1e-3 * losses["z_loss"]
+    else:  # rwkv channel mix
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        if collect_state:
+            state = dict(state or {})
+            state["cm_x_prev"] = h[:, -1, :]
+        y = mlp.apply_rwkv_cm(p["mlp"], cfg, h, h_prev)
+    x = x + y
+    return x, aux, state
+
+
+def forward(params, cfg, *, tokens=None, embeds=None, positions=None,
+            impl=None, return_cache: bool = False, cache_len: int | None = None):
+    """-> logits (B,L,V) [, cache].  ``embeds`` bypasses the token embedding
+    (VLM/audio frontend stubs feed precomputed embeddings)."""
+    if embeds is None:
+        embeds = params["embed"][tokens]
+    x = constrain(embeds, ("batch", "seq", "embed_act"))
+    b, l, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+
+    npos = len(cfg.block_pattern)
+
+    # Inner per-block remat (patterns > 1 block): backward holds one block's
+    # intermediates at a time instead of the whole repeat (Jamba: 8 layers).
+    inner_ckpt = cfg.remat and npos > 1 and not return_cache
+
+    def body(carry, layer_p):
+        x, aux = carry
+        states = []
+        for pos in range(npos):
+            def fn(pp, xx, *, _pos=pos):
+                return _apply_block(pp, cfg, _pos, xx, positions, impl=impl,
+                                    collect_state=return_cache)
+            if inner_ckpt:
+                fn = jax.checkpoint(fn)
+            x, aux_i, st = fn(layer_p[str(pos)], x)
+            aux = aux + aux_i
+            states.append(st)
+        out = _pack_states(states, cfg, cache_len) if return_cache else None
+        return (x, aux), out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    if return_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def _pack_states(states, cfg, cache_len):
+    """Pad per-layer prefill states into decode-cache layout."""
+    packed = []
+    for pos, st in enumerate(states):
+        if st is None:
+            packed.append({})
+            continue
+        d = {}
+        for k2, v2 in st.items():
+            if k2 in ("k", "v"):
+                s_max = cache_len or v2.shape[2]
+                pad = s_max - v2.shape[2]
+                d[k2] = jnp.pad(v2, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            else:
+                d[k2] = v2
+        packed.append(d)
+    return {str(i): p for i, p in enumerate(packed)}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Allocate the decode cache (stacked over pattern repeats)."""
+    dtype = _dtype(cfg)
+    reps = cfg.pattern_repeats
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    cache = {}
+    for pos, (mixer, mlp_kind) in enumerate(cfg.block_pattern):
+        c = {}
+        if mixer == "attn":
+            c["k"] = jnp.zeros((reps, batch, nkv, max_len, hd), dtype)
+            c["v"] = jnp.zeros((reps, batch, nkv, max_len, hd), dtype)
+        elif mixer == "mamba":
+            c["conv"] = jnp.zeros((reps, batch, cfg.d_conv - 1, cfg.d_inner),
+                                  dtype)
+            c["ssm"] = jnp.zeros((reps, batch, cfg.d_inner, cfg.d_state),
+                                 jnp.float32)
+        else:  # rwkv
+            c["x_prev"] = jnp.zeros((reps, batch, cfg.d_model), dtype)
+            c["s"] = jnp.zeros((reps, batch, nh, dh, dh), jnp.float32)
+        if mlp_kind == "rwkv_cm":
+            c["cm_x_prev"] = jnp.zeros((reps, batch, cfg.d_model), dtype)
+        cache[str(pos)] = c
+    return cache
+
+
+def _decode_block(p, cfg, pos: int, x, cache, idx):
+    mixer, mlp_kind = cfg.block_pattern[pos]
+    new = {}
+    h = rms_norm(x, p["norm1"], eps=cfg.norm_eps)
+    if mixer == "attn":
+        y, (ck, cv) = attention.decode(p["mixer"], cfg, h,
+                                       (cache["k"], cache["v"]), idx)
+        new["k"], new["v"] = ck, cv
+    elif mixer == "mamba":
+        y, (cs, hs) = mamba.decode(p["mixer"], cfg, h,
+                                   (cache["conv"], cache["ssm"]))
+        new["conv"], new["ssm"] = cs, hs
+    else:
+        y, (xp, sw) = rwkv.decode(p["mixer"], cfg, h,
+                                  (cache["x_prev"], cache["s"]))
+        new["x_prev"], new["s"] = xp, sw
+    x = x + y
+    h = rms_norm(x, p["norm2"], eps=cfg.norm_eps)
+    if mlp_kind == "dense":
+        y = mlp.apply(p["mlp"], cfg, h)
+    elif mlp_kind == "moe":
+        y, _ = moe.apply(p["mlp"], cfg, h)
+    else:
+        h_prev = cache["cm_x_prev"][:, None, :]
+        new["cm_x_prev"] = h[:, -1, :]
+        y = mlp.apply_rwkv_cm(p["mlp"], cfg, h, h_prev)
+    x = x + y
+    return x, new
+
+
+def decode_step(params, cfg, tokens, cache, idx, *, embeds=None):
+    """tokens: (B,1) [or embeds (B,1,D)]; idx: scalar position.  Returns
+    (logits (B,1,V), new cache)."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds
+    npos = len(cfg.block_pattern)
+
+    def body(x, inp):
+        layer_p, layer_c = inp
+        new_c = {}
+        for pos in range(npos):
+            x, nc = _decode_block(layer_p[str(pos)], cfg, pos, x,
+                                  layer_c[str(pos)], idx)
+            new_c[str(pos)] = nc
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps)
+    head = params.get("head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    return logits, new_cache
+
+
+def lm_loss(params, cfg, tokens, labels, *, impl=None):
+    logits, aux = forward(params, cfg, tokens=tokens, impl=impl)
+    return softmax_xent(logits, labels) + aux
+
+
+def lm_loss_embeds(params, cfg, embeds, labels, *, impl=None):
+    logits, aux = forward(params, cfg, embeds=embeds, impl=impl)
+    return softmax_xent(logits, labels) + aux

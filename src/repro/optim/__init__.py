@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, adamw  # noqa: F401
+from repro.optim.compress import compress_int8, decompress_int8  # noqa: F401

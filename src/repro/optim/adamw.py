@@ -1,0 +1,92 @@
+"""AdamW with memory knobs for the 100B+ archs:
+
+  * ``state_dtype`` — keep m/v in bf16 (halves optimizer HBM);
+  * ``factored``    — Adafactor-style factored second moment for matrices
+    (row+col accumulators instead of the full v tensor);
+  * optimizer state inherits the parameter sharding (ZeRO-1 comes free:
+    when params are FSDP-sharded the states are too).
+
+Functional API: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params, lr) -> (new_params, new_state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: Any = jnp.float32
+    factored: bool = False
+    factored_min_size: int = 128
+
+    def _is_factored(self, p):
+        return (self.factored and p.ndim >= 2
+                and p.shape[-1] >= self.factored_min_size
+                and p.shape[-2] >= self.factored_min_size)
+
+    def init(self, params):
+        def leaf(p):
+            m = jnp.zeros_like(p, dtype=self.state_dtype)
+            if self._is_factored(p):
+                vr = jnp.zeros(p.shape[:-1], jnp.float32)
+                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"m": m, "vr": vr, "vc": vc}
+            return {"m": m, "v": jnp.zeros_like(p, dtype=self.state_dtype)}
+        return {"mu": jax.tree.map(leaf, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        count = state["count"] + 1
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def leaf(g, s, p):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * s["m"].astype(jnp.float32) + (1 - self.b1) * g32
+            if "v" in s:
+                v = self.b2 * s["v"].astype(jnp.float32) \
+                    + (1 - self.b2) * g32 * g32
+                vhat = v / b2c
+                ns = {"m": m.astype(self.state_dtype),
+                      "v": v.astype(self.state_dtype)}
+            else:
+                g2 = g32 * g32
+                vr = self.b2 * s["vr"] + (1 - self.b2) * g2.mean(axis=-1)
+                vc = self.b2 * s["vc"] + (1 - self.b2) * g2.mean(axis=-2)
+                # rank-1 reconstruction (Adafactor)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / denom[..., None]) / b2c
+                ns = {"m": m.astype(self.state_dtype), "vr": vr, "vc": vc}
+            upd = (m / b1c) / (jnp.sqrt(vhat) + self.eps)
+            upd = upd + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return newp, ns
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["mu"])
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        return new_params, {"mu": new_mu, "count": count}
+
+
+def adamw(**kw) -> AdamW:
+    return AdamW(**kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn

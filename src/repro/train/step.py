@@ -1,0 +1,106 @@
+"""Train / prefill / decode step builders (pjit-ready, mesh-agnostic).
+
+``make_train_step`` closes over the model config and optimizer; the caller
+jits it with shardings derived from the logical-axis spec trees
+(``nn.partitioning``).  Gradient all-reduce across the data axes is
+implicit in the sharded autodiff; overlap comes from the XLA latency-hiding
+scheduler (see launch/dryrun.py flags) plus optional microbatch gradient
+accumulation (``accum_steps``) which pipelines the dW reduction of
+microbatch i with the compute of i+1 — the paper's §II-J trade-off at
+cluster scale.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import transformer as T
+from repro.optim.adamw import clip_by_global_norm
+
+
+def loss_for_batch(params, cfg, batch, *, impl=None):
+    if "embeds" in batch:
+        return T.lm_loss_embeds(params, cfg, batch["embeds"],
+                                batch["labels"], impl=impl)
+    return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                     impl=impl)
+
+
+def make_train_step(cfg, opt, *, lr: float = 3e-4, clip: float = 1.0,
+                    accum_steps: int = 1, impl=None):
+    def train_step(state, batch):
+        params = state["params"]
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_for_batch)(
+                params, cfg, batch, impl=impl)
+        else:
+            def micro(i, carry):
+                acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // accum_steps),
+                        x.shape[0] // accum_steps, 0), batch)
+                l, g = jax.value_and_grad(loss_for_batch)(
+                    params, cfg, mb, impl=impl)
+                return (jax.tree.map(jnp.add, acc, g), loss_acc + l)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss = jax.lax.fori_loop(
+                0, accum_steps, micro, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        new_params, new_opt = opt.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg, *, cache_len: int, impl=None):
+    def prefill(params, batch):
+        kw = dict(impl=impl, return_cache=True, cache_len=cache_len)
+        if "embeds" in batch:
+            logits, _, cache = T.forward(params, cfg, embeds=batch["embeds"],
+                                         **kw)
+        else:
+            logits, _, cache = T.forward(params, cfg, tokens=batch["tokens"],
+                                         **kw)
+        return logits[:, -1:, :], cache
+    return prefill
+
+
+def make_decode_step(cfg, *, impl=None):
+    def serve_step(params, tokens, cache, idx):
+        return T.decode_step(params, cfg, tokens, cache, idx)
+    return serve_step
+
+
+def init_train_state(cfg, opt, key):
+    params, specs = T.init_lm(key, cfg)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}, specs
+
+
+def train_state_specs(param_specs, opt_state):
+    """Logical-axis spec tree for the full train state: optimizer slots
+    inherit their parameter's axes (factored accumulators drop the reduced
+    dim).  ``opt_state`` may be real or eval_shape'd — only its structure is
+    read."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def leaf(spec, slot):
+        out = {"m": spec}
+        if "v" in slot:
+            out["v"] = spec
+        if "vr" in slot:
+            out["vr"] = spec[:-1]
+            out["vc"] = spec[:-2] + spec[-1:]
+        return out
+
+    mu = jax.tree.map(leaf, param_specs, opt_state["mu"], is_leaf=is_spec)
+    return {"params": param_specs, "opt": {"mu": mu, "count": ()},
+            "step": ()}

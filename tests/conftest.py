@@ -1,0 +1,14 @@
+import os
+
+# Tests run single-device ("xla"/"interpret" paths).  The 512-device flag is
+# set ONLY inside launch/dryrun.py and the subprocess-based distributed
+# tests — never globally here.
+os.environ.setdefault("REPRO_BACKEND", "xla")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,86 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same
+family, one forward + one train step + one decode step on CPU; output
+shapes + no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.nn import transformer as T
+
+ALL = sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_forward_and_train(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params, specs = T.init_lm(key, cfg)
+    b, l = 2, 16
+    toks = jax.random.randint(key, (b, l), 0, cfg.vocab)
+    labels = jax.random.randint(key, (b, l), 0, cfg.vocab)
+    if cfg.frontend == "vision":
+        embeds = jax.random.normal(key, (b, l, cfg.d_model), jnp.float32)
+        logits, aux = T.forward(params, cfg, embeds=embeds)
+        loss, grads = jax.value_and_grad(T.lm_loss_embeds)(
+            params, cfg, embeds, labels)
+    else:
+        logits, aux = T.forward(params, cfg, tokens=toks)
+        loss, grads = jax.value_and_grad(T.lm_loss)(params, cfg, toks, labels)
+    assert logits.shape == (b, l, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(loss))
+    gn = jax.tree.reduce(lambda a, g: a + jnp.sum(g * g), grads, 0.0)
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_decode(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params, _ = T.init_lm(key, cfg)
+    b, max_len = 2, 8
+    cache = T.init_cache(cfg, b, max_len)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    for i in range(3):
+        logits, cache = T.decode_step(params, cfg, tok, cache,
+                                      jnp.int32(i))
+        assert logits.shape == (b, 1, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_param_specs_cover_params(arch):
+    """Every param leaf has a logical-axis spec of matching rank."""
+    cfg = smoke_config(get_config(arch))
+    params, specs = T.init_lm(jax.random.PRNGKey(0), cfg)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    assert len(flat_p) == len(flat_s)
+    for (_, p), s in zip(flat_p, flat_s):
+        assert len(s) <= p.ndim, (s, p.shape)
+
+
+def test_published_param_counts():
+    """Analytic param counts must land near the published totals."""
+    expect = {
+        "qwen2-1.5b": 1.5e9, "qwen3-8b": 8.2e9, "internlm2-1.8b": 1.9e9,
+        "smollm-360m": 0.36e9, "phi3.5-moe-42b-a6.6b": 42e9,
+        "dbrx-132b": 132e9, "rwkv6-1.6b": 1.6e9,
+        "jamba-1.5-large-398b": 398e9,
+    }
+    for name, target in expect.items():
+        got = get_config(name).param_count()
+        assert abs(got - target) / target < 0.12, (name, got, target)
+
+
+def test_active_param_counts():
+    assert abs(get_config("phi3.5-moe-42b-a6.6b").active_param_count()
+               - 6.6e9) / 6.6e9 < 0.1
+    assert abs(get_config("dbrx-132b").active_param_count()
+               - 36e9) / 36e9 < 0.1
+    assert abs(get_config("jamba-1.5-large-398b").active_param_count()
+               - 94e9) / 94e9 < 0.1

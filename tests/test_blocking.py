@@ -1,0 +1,78 @@
+"""Blocking heuristics (§II-B/C/D on TPU constraints): VMEM budget
+respected, MXU-aligned blocks, divisor mode, loop-order rule."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import (VMEM_BUDGET, conv_blocking, divisors,
+                                 matmul_blocking)
+from repro.core.wu_strategy import choose_wu_strategy, hybrid_copies
+from repro.graph.topology import RESNET50_LAYERS
+
+
+def test_resnet_layers_fit_vmem():
+    for lid, l in RESNET50_LAYERS.items():
+        if l["c"] < 8:
+            continue  # conv1 takes the im2col path
+        blk = conv_blocking(h=l["h"], w=l["w"], c=l["c"], k=l["k"],
+                            r=l["r"], s=l["s"], stride=l["stride"],
+                            padding=l["r"] // 2)
+        assert blk.vmem_bytes <= VMEM_BUDGET, (lid, blk)
+        assert l["k"] % blk.k_blk == 0
+
+
+def test_loop_order_rule():
+    b1 = conv_blocking(h=56, w=56, c=256, k=64, r=1, s=1, stride=1,
+                       padding=0)
+    b3 = conv_blocking(h=56, w=56, c=64, k=64, r=3, s=3, stride=1,
+                       padding=1)
+    assert b1.order == "npkc"   # paper §II-C: pull C_b in for 1x1
+    assert b3.order == "nkpc"
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=st.integers(7, 224), c=st.sampled_from([8, 64, 256, 1024]),
+       k=st.sampled_from([8, 64, 256]), r=st.sampled_from([1, 3, 5, 7]),
+       stride=st.integers(1, 2))
+def test_conv_blocking_properties(h, c, k, r, stride):
+    blk = conv_blocking(h=h, w=h, c=c, k=k, r=r, s=r, stride=stride,
+                        padding=r // 2)
+    p = (h + 2 * (r // 2) - r) // stride + 1
+    assert 1 <= blk.rb_p <= max(p, 1)
+    assert k % blk.k_blk == 0
+    assert blk.k_blk <= 128
+
+
+@settings(max_examples=20, deadline=None)
+@given(h=st.integers(7, 56), r=st.sampled_from([1, 3]))
+def test_divisor_mode(h, r):
+    blk = conv_blocking(h=h, w=h, c=64, k=64, r=r, s=r, stride=1,
+                        padding=r // 2, require_divisor=True)
+    p = h + 2 * (r // 2) - r + 1
+    assert p % blk.rb_p == 0
+
+
+def test_matmul_blocking_budget():
+    blk = matmul_blocking(4096, 4096, 24576, dtype_bytes=2)
+    assert blk.vmem_bytes <= VMEM_BUDGET
+    assert 24576 % blk.bk == 0
+
+
+def test_wu_strategy_tradeoff():
+    """Small spatial layer (dW dominates) -> 'shared'; big spatial layer
+    (activations dominate) -> 'copies' (paper §II-J)."""
+    small = choose_wu_strategy(n=28, c=2048, k=512, h=7, w=7, p=7, q=7,
+                               r=1, s=1, n_workers=64)
+    big = choose_wu_strategy(n=28, c=64, k=64, h=56, w=56, p=56, q=56,
+                             r=3, s=3, n_workers=64)
+    assert small.strategy == "shared"
+    assert big.strategy == "copies"
+
+
+def test_hybrid_copies_bounds():
+    m = hybrid_copies(n=64, dw_bytes=10_000, act_bytes=100_000_000,
+                      n_workers=64)
+    assert 1 <= m <= 64
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]

@@ -1,0 +1,113 @@
+"""Per-kernel allclose vs the pure-jnp oracle (interpret mode), swept over
+shapes / strides / dtypes, plus hypothesis property sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.conv2d_direct import conv2d_direct
+from repro.kernels.conv2d_streams import conv2d_streams_auto
+from repro.kernels.conv2d_wu import conv2d_wu
+
+CASES = [
+    # n, h, w, c, k, r, stride, pad, rb_p
+    (2, 8, 8, 8, 16, 3, 1, 1, 4),
+    (1, 14, 14, 16, 32, 1, 1, 0, 7),
+    (2, 16, 16, 8, 8, 3, 2, 1, 4),
+    (1, 7, 7, 8, 16, 3, 1, 1, 7),
+    (1, 9, 9, 8, 8, 3, 1, 1, 4),      # ceil-div row grid
+    (1, 8, 8, 8, 8, 1, 2, 0, 2),
+    (1, 12, 12, 8, 8, 5, 1, 2, 3),    # 5x5 filter
+]
+
+
+def _data(rng, n, h, w, c, k, r, dtype=np.float32):
+    x = rng.standard_normal((n, h, w, c)).astype(dtype)
+    wt = (rng.standard_normal((r, r, c, k)) * 0.1).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(wt)
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_conv2d_direct_matches_ref(rng, case):
+    n, h, w, c, k, r, stride, pad, rb_p = case
+    x, wt = _data(rng, n, h, w, c, k, r)
+    out = conv2d_direct(x, wt, stride=stride, padding=pad, rb_p=rb_p,
+                        interpret=True)
+    exp = ref.conv2d(x, wt, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_direct_bf16(rng):
+    x, wt = _data(rng, 1, 8, 8, 8, 16, 3, dtype=np.float32)
+    x, wt = x.astype(jnp.bfloat16), wt.astype(jnp.bfloat16)
+    out = conv2d_direct(x, wt, stride=1, padding=1, rb_p=4, interpret=True)
+    exp = ref.conv2d(x, wt, stride=1, padding=1)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_conv2d_fused_epilogue(rng):
+    x, wt = _data(rng, 1, 8, 8, 8, 16, 3)
+    b = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    sc = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    sh = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    res = jnp.asarray(rng.standard_normal((1, 8, 8, 16)), jnp.float32)
+    out = conv2d_direct(x, wt, stride=1, padding=1, bias=b, scale=sc,
+                        shift=sh, residual=res, relu=True, rb_p=4,
+                        interpret=True)
+    exp = ref.conv2d_fused(x, wt, stride=1, padding=1, bias=b, scale=sc,
+                           shift=sh, residual=res, relu=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("case", [c for c in CASES if c[1] != 9])
+def test_conv2d_wu_matches_vjp(rng, case):
+    n, h, w, c, k, r, stride, pad, bp = case
+    p = (h + 2 * pad - r) // stride + 1
+    if p % bp:
+        bp = 1
+    x, _ = _data(rng, n, h, w, c, k, r)
+    do = jnp.asarray(rng.standard_normal((n, p, p, k)), jnp.float32)
+    out = conv2d_wu(x, do, stride=stride, padding=pad, filter_rs=(r, r),
+                    b_p=bp, interpret=True)
+    exp = ref.conv2d_bwd_weights(x, do, stride=stride, padding=pad,
+                                 filter_rs=(r, r))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("order", ["nkpc", "npkc", "knpc"])
+def test_conv2d_streams_matches_ref(rng, order):
+    x, wt = _data(rng, 2, 8, 8, 16, 16, 3)
+    b = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    out = conv2d_streams_auto(x, wt, stride=1, padding=1, bias=b, relu=True,
+                              rb_p=4, k_blk=8, c_blk=8, order=order,
+                              interpret=True)
+    exp = ref.conv2d_fused(x, wt, stride=1, padding=1, bias=b, relu=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 2), hw=st.integers(6, 12),
+    c=st.sampled_from([8, 16]), k=st.sampled_from([8, 16]),
+    r=st.sampled_from([1, 3]), stride=st.integers(1, 2),
+    rb_p=st.integers(1, 4), seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_direct_property(n, hw, c, k, r, stride, rb_p, seed):
+    rng = np.random.default_rng(seed)
+    pad = r // 2
+    x = jnp.asarray(rng.standard_normal((n, hw, hw, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1, jnp.float32)
+    out = conv2d_direct(x, wt, stride=stride, padding=pad, rb_p=rb_p,
+                        interpret=True)
+    exp = ref.conv2d(x, wt, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,66 @@
+"""Quantized conv kernel (§II-K as a kernel) + pooling kernel vs oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.conv2d_q8 import conv2d_q8, quantize_conv_inputs
+from repro.kernels.pool2d import maxpool2d
+
+
+@pytest.mark.parametrize("case", [
+    (2, 8, 8, 8, 16, 3, 1, 1),
+    (1, 9, 9, 8, 8, 3, 2, 1),
+    (1, 8, 8, 16, 8, 1, 1, 0),
+])
+def test_conv2d_q8_close_to_f32(rng, case):
+    n, h, w, c, k, r, stride, pad = case
+    x = jnp.asarray(rng.standard_normal((n, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1, jnp.float32)
+    xq, wq, sx, sw = quantize_conv_inputs(x, wt)
+    out = conv2d_q8(xq, wq, x_scale=sx, w_scale=sw, stride=stride,
+                    padding=pad, rb_p=4, interpret=True)
+    exp = ref.conv2d(x, wt, stride=stride, padding=pad)
+    # int8 quantization error bound: relative to output scale
+    denom = float(jnp.abs(exp).max()) + 1e-6
+    rel = float(jnp.abs(out - exp).max()) / denom
+    assert rel < 0.05, rel
+
+
+def test_conv2d_q8_int32_accumulation_exact(rng):
+    """With integer-valued inputs the int8 path must be EXACT (the paper's
+    claim that the quantized kernel computes the same chained GEMMs)."""
+    n, h, c, k = 1, 6, 8, 8
+    x = jnp.asarray(rng.integers(-3, 4, (n, h, h, c)), jnp.float32)
+    wt = jnp.asarray(rng.integers(-3, 4, (3, 3, c, k)), jnp.float32)
+    xq = x.astype(jnp.int8)
+    wq = wt.astype(jnp.int8)
+    out = conv2d_q8(xq, wq, x_scale=jnp.float32(1.0),
+                    w_scale=jnp.ones((k,), jnp.float32), stride=1,
+                    padding=1, rb_p=3, interpret=True)
+    exp = ref.conv2d(x, wt, stride=1, padding=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_conv2d_q8_relu_epilogue(rng):
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 8)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) * 0.1, jnp.float32)
+    xq, wq, sx, sw = quantize_conv_inputs(x, wt)
+    out = conv2d_q8(xq, wq, x_scale=sx, w_scale=sw, stride=1, padding=1,
+                    relu=True, rb_p=4, interpret=True)
+    assert float(out.min()) >= 0.0
+
+
+@pytest.mark.parametrize("window,stride,pad,h", [
+    (3, 2, 1, 12), (2, 2, 0, 8), (3, 1, 1, 7),
+])
+def test_maxpool2d_matches_lax(rng, window, stride, pad, h):
+    x = jnp.asarray(rng.standard_normal((2, h, h, 8)), jnp.float32)
+    out = maxpool2d(x, window=window, stride=stride, padding=pad, rb_p=3,
+                    interpret=True)
+    exp = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1),
+        [(0, 0), (pad, pad), (pad, pad), (0, 0)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp))

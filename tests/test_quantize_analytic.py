@@ -1,0 +1,89 @@
+"""int8 quantization (§II-K analog) + analytic roofline sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_config, smoke_config
+from repro.configs.shapes import applicable
+from repro.core.quantize import dequantize, quantize_int8, quantized_specs
+from repro.launch import analytic as A
+from repro.nn import transformer as T
+
+
+def test_quantize_roundtrip_error_bounded(rng):
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 3.0, jnp.float32)
+    tree = {"w": w, "small": jnp.ones((4,))}
+    q = quantize_int8(tree, min_size=64)
+    assert q["w"]["q"].dtype == jnp.int8
+    assert q["small"].dtype == jnp.float32          # passthrough
+    deq = dequantize(q, jnp.float32)
+    err = np.abs(np.asarray(deq["w"]) - np.asarray(w))
+    per_col_scale = np.abs(np.asarray(w)).max(0) / 127.0
+    assert (err <= per_col_scale[None, :] * 0.51 + 1e-6).all()
+
+
+def test_quantized_model_logits_close():
+    cfg = smoke_config(get_config("qwen2-1.5b"))
+    params, specs = T.init_lm(jax.random.PRNGKey(0), cfg)
+    qp = quantize_int8(params, min_size=64)
+    qs = quantized_specs(specs, params, min_size=64)
+    # spec tree mirrors the quantized structure (specs are tuple leaves)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def paths(t, is_leaf=None):
+        flat, _ = jax.tree_util.tree_flatten_with_path(t, is_leaf=is_leaf)
+        return {tuple(str(p) for p in path) for path, _ in flat}
+    assert paths(qp) == paths(qs, is_leaf=is_spec)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    lf, _ = T.forward(params, cfg, tokens=toks)
+    lq, _ = T.forward(dequantize(qp, jnp.float32), cfg, tokens=toks)
+    drift = float(jnp.abs(jax.nn.softmax(lf) - jax.nn.softmax(lq)).max())
+    assert drift < 0.05, drift
+
+
+@pytest.mark.parametrize("mesh", [(256, 16, 16), (512, 32, 16)])
+def test_analytic_terms_sane(mesh):
+    chips, dp, mp = mesh
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if not applicable(cfg, shape)[0]:
+                continue
+            t = A.analytic_roofline(cfg, shape, chips=chips, model_par=mp,
+                                    data_par=dp)
+            assert t.compute_s > 0 and t.memory_s > 0
+            assert t.collective_s >= 0
+            assert 0 < A.mfu(cfg, shape, t, chips) <= 1.0, (arch, shape.name)
+
+
+def test_profiles_reduce_collectives():
+    """The §Perf levers must move the analytic terms the claimed way."""
+    import dataclasses
+    shape = SHAPES["train_4k"]
+    cfg = get_config("smollm-360m")
+    base = A.analytic_roofline(cfg, shape, chips=256, model_par=16,
+                               data_par=16)
+    ddp = A.analytic_roofline(dataclasses.replace(cfg, sharding="ddp"),
+                              shape, chips=256, model_par=16, data_par=16)
+    assert ddp.collective_s < base.collective_s / 5
+    assert ddp.dominant == "compute"
+
+    dec = SHAPES["decode_32k"]
+    cfgj = get_config("jamba-1.5-large-398b")
+    b = A.analytic_roofline(cfgj, dec, chips=256, model_par=16, data_par=16)
+    q = A.analytic_roofline(cfgj, dec, chips=256, model_par=16, data_par=16,
+                            quantized=True)
+    assert 1.8 < b.step_time_s / q.step_time_s < 2.2
+
+
+def test_quantization_halves_weight_bytes():
+    cfg = smoke_config(get_config("qwen3-8b"))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    def nbytes(t):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(t))
+    full = nbytes(jax.tree.map(lambda x: x.astype(jnp.bfloat16), params))
+    quant = nbytes(quantize_int8(params, min_size=64))
+    assert quant < 0.65 * full

@@ -1,0 +1,49 @@
+"""Serving layer: batched generate + continuous batching with lane refill."""
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.launch.serve import generate, serve_continuous
+from repro.nn import transformer as T
+
+
+def _setup(arch="qwen2-1.5b"):
+    cfg = smoke_config(get_config(arch))
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_generate_batch_matches_single():
+    """Lockstep batched decode must equal one-at-a-time decode (greedy)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, size=6) for _ in range(3)]
+    batched = generate(params, cfg, prompts, max_new=5, max_len=32)
+    for i, p in enumerate(prompts):
+        single = generate(params, cfg, [p], max_new=5, max_len=32)
+        assert batched[i] == single[0], i
+
+
+def test_continuous_batching_serves_all_requests():
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(1, cfg.vocab, size=int(rng.integers(3, 7)))
+            for _ in range(6)]
+    out = serve_continuous(params, cfg, reqs, lanes=2, max_len=32,
+                           max_new=4)
+    assert set(out) == set(range(6))          # every request served
+    assert all(1 <= len(v) <= 4 for v in out.values())
+    assert all(0 <= t < cfg.vocab for v in out.values() for t in v)
+
+
+def test_continuous_matches_dedicated_lane():
+    """A request served through the continuous scheduler must produce the
+    same greedy tokens as a dedicated generate() call."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(2)
+    reqs = [rng.integers(1, cfg.vocab, size=5) for _ in range(2)]
+    cont = serve_continuous(params, cfg, reqs, lanes=2, max_len=32,
+                            max_new=4, eos=-1)
+    for i, p in enumerate(reqs):
+        ded = generate(params, cfg, [p], max_new=4, max_len=32)
+        assert cont[i] == ded[0], (i, cont[i], ded[0])

@@ -1,0 +1,75 @@
+"""Kernel-streams framework (§II-H): schedule construction, RLE segments,
+prefetch-offset property, loop orders."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.streams import (FLAG_EPILOGUE, FLAG_INIT, FLAG_RELU,
+                                build_conv_schedule, decode_segments,
+                                prefetch_streams, rle_segments)
+
+
+def test_schedule_covers_iteration_space():
+    s = build_conv_schedule(n=2, k_b=3, p_b=4, c_b=2, order="nkpc")
+    assert len(s) == 2 * 3 * 4 * 2
+    cells = set(zip(s.n_ids, s.kb_ids, s.pb_ids, s.cb_ids))
+    assert len(cells) == len(s)          # every cell exactly once
+
+
+def test_init_epilogue_flags():
+    s = build_conv_schedule(n=1, k_b=2, p_b=2, c_b=3, order="nkpc",
+                            relu=True)
+    flags = s.flags
+    cb = s.cb_ids
+    assert ((flags[cb == 0] & FLAG_INIT) != 0).all()
+    assert ((flags[cb == 2] & FLAG_EPILOGUE) != 0).all()
+    assert ((flags[cb == 2] & FLAG_RELU) != 0).all()
+    assert ((flags[cb == 1] & (FLAG_INIT | FLAG_EPILOGUE)) == 0).all()
+
+
+def test_c_innermost_required():
+    with pytest.raises(AssertionError):
+        build_conv_schedule(n=1, k_b=1, p_b=1, c_b=2, order="nckp")
+
+
+@pytest.mark.parametrize("order", ["nkpc", "npkc", "knpc", "pknc"])
+def test_orders_permute_but_cover(order):
+    s = build_conv_schedule(n=2, k_b=2, p_b=2, c_b=2, order=order)
+    assert len(set(zip(s.n_ids, s.kb_ids, s.pb_ids, s.cb_ids))) == 16
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=200))
+def test_rle_roundtrip(flags):
+    flags = np.asarray(flags, np.int32)
+    segs = rle_segments(flags)
+    out = decode_segments(segs, len(flags))
+    np.testing.assert_array_equal(out, flags)
+    # segments are maximal: adjacent segments have different values
+    vals = [v for v, _, _ in segs]
+    assert all(a != b for a, b in zip(vals, vals[1:]))
+
+
+def test_prefetch_offsets_are_next_invocation():
+    """Fig. 1 property: pi_off_i == i_off_{i+1} (etc.)."""
+    s = build_conv_schedule(n=2, k_b=2, p_b=3, c_b=2, order="nkpc")
+    pn, pk, pp, pc = prefetch_streams(s)
+    np.testing.assert_array_equal(pn[:-1], s.n_ids[1:])
+    np.testing.assert_array_equal(pk[:-1], s.kb_ids[1:])
+    np.testing.assert_array_equal(pp[:-1], s.pb_ids[1:])
+    np.testing.assert_array_equal(pc[:-1], s.cb_ids[1:])
+    # last step prefetches itself (no-op)
+    assert pn[-1] == s.n_ids[-1]
+
+
+def test_segment_compression_on_conv_streaks():
+    """A schedule whose steps share a kernel variant compresses into
+    CONV-STREAK segments (paper Fig. 2): O(1) segments for O(N) steps."""
+    s = build_conv_schedule(n=4, k_b=4, p_b=8, c_b=1, order="nkpc",
+                            relu=True)
+    assert len(s) == 128
+    assert len(s.segments) == 1          # one uniform CONV-STREAK
+    # multi-C_b schedules segment per (init / streak / epilogue) phase:
+    s4 = build_conv_schedule(n=4, k_b=4, p_b=8, c_b=4, order="nkpc",
+                             relu=True)
+    assert len(s4.segments) <= 3 * 128   # bounded by 3 per output tile
