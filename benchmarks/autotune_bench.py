@@ -1,0 +1,106 @@
+"""Tuned-vs-heuristic blocking on the paper's layer tables (§II-D empirical).
+
+For every distinct conv shape in ResNet-50 (paper Table I) and Inception-v3
+(derived from the topology graph) this bench:
+
+  1. scores the analytic heuristic blocking with the tuner's cost model,
+  2. autotunes the shape (persistent cache; real wall clock on TPU, cost
+     model on CPU — see repro.tune.measure), and
+  3. emits one CSV row with both scores, the modeled speedup, the chosen
+     blocking delta, and whether the winner came from the persistent cache.
+
+Run it twice: the second invocation must be all cache hits — that round trip
+is the acceptance check for the dispatch-cache story.
+
+  PYTHONPATH=src python -m benchmarks.autotune_bench [--layers N]
+"""
+import sys
+
+from benchmarks.common import emit
+from repro import backend as be
+from repro import tune
+from repro.core.blocking import conv_blocking_analytic
+from repro.graph.topology import RESNET50_LAYERS, inception_v3
+
+MINIBATCH = 28          # paper: 28 images per SKX socket
+
+
+def inception_layers(input_hw: int = 299) -> dict:
+    """Distinct conv shapes of the Inception-v3 topology, spatial dims
+    propagated from `input_hw` through the stem/pool strides."""
+    hw = {"input": (input_hw, input_hw)}
+    layers = {}
+    for node in inception_v3(num_classes=1000):
+        if node.op in ("input", "fc"):
+            continue
+        src = node.inputs[0] if node.inputs else None
+        h, w = hw.get(src, (0, 0))
+        if node.op == "conv":
+            a = node.attrs
+            p = (h + 2 * a["padding"] - a["r"]) // a["stride"] + 1
+            q = (w + 2 * a["padding"] - a["s"]) // a["stride"] + 1
+            hw[node.name] = (p, q)
+            key = (a["c"], a["k"], h, w, a["r"], a["s"], a["stride"])
+            layers.setdefault(key, dict(c=a["c"], k=a["k"], h=h, w=w,
+                                        r=a["r"], s=a["s"],
+                                        stride=a["stride"]))
+        elif node.op == "maxpool":
+            a = node.attrs
+            p = (h + 2 * a["padding"] - a["window"]) // a["stride"] + 1
+            hw[node.name] = (p, p)
+        else:                       # bn/relu/add/concat/avgpool: shape-keep
+            hw[node.name] = (h, w)
+    return {i + 1: l for i, l in enumerate(layers.values())}
+
+
+def bench_table(table_name: str, layers: dict, *, limit: int | None = None):
+    backend = be.get_backend()
+    hits = total = 0
+    gains = []
+    # filter before slicing so --layers N yields N tunable rows
+    items = [(lid, l) for lid, l in sorted(layers.items())
+             if l["c"] % 8 == 0 and l["k"] % 8 == 0][:limit]
+    for lid, l in items:
+        pad = l["r"] // 2
+        shape = dict(h=l["h"], w=l["w"], c=l["c"], k=l["k"], r=l["r"],
+                     s=l["s"], stride=l["stride"], padding=pad,
+                     dtype_bytes=4)
+        kw = dict(h=l["h"], w=l["w"], c=l["c"], k=l["k"], r=l["r"], s=l["s"],
+                  stride=l["stride"], padding=pad, kind="fwd",
+                  backend=backend, minibatch=MINIBATCH)
+        cached = tune.lookup_conv(**kw) is not None
+        heur = conv_blocking_analytic(
+            h=l["h"], w=l["w"], c=l["c"], k=l["k"], r=l["r"], s=l["s"],
+            stride=l["stride"], padding=pad)
+        tuned = tune.autotune_conv(**kw)
+        heur_us = tune.conv_cost_us(shape, heur, minibatch=MINIBATCH)
+        tuned_us = tune.conv_cost_us(shape, tuned, minibatch=MINIBATCH)
+        speedup = heur_us / tuned_us if tuned_us else 1.0
+        total += 1
+        hits += cached
+        gains.append(speedup)
+        emit(f"autotune_{table_name}_L{lid:02d}", tuned_us,
+             f"heur_us={heur_us:.1f};speedup={speedup:.2f}x;"
+             f"cache={'hit' if cached else 'miss'};"
+             f"rb_p={heur.rb_p}->{tuned.rb_p};"
+             f"kblk={heur.k_blk}->{tuned.k_blk}")
+    if gains:
+        gains.sort()
+        emit(f"autotune_{table_name}_summary", 0.0,
+             f"layers={total};cache_hits={hits};"
+             f"median_speedup={gains[len(gains) // 2]:.2f}x;"
+             f"max_speedup={gains[-1]:.2f}x;"
+             f"cache_path={tune.default_cache().path}")
+
+
+def main(limit: int | None = None):
+    bench_table("resnet50", RESNET50_LAYERS, limit=limit)
+    bench_table("inception", inception_layers(), limit=limit)
+
+
+if __name__ == "__main__":
+    limit = None
+    if "--layers" in sys.argv:
+        limit = int(sys.argv[sys.argv.index("--layers") + 1])
+    print("name,us_per_call,derived")
+    main(limit=limit)

@@ -7,14 +7,21 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   Fig 9            -> scaling_bench         (strong scaling, overlap model)
   §II-G/GxM        -> fusion_bench          (fused vs unfused + ETG stats)
   §II-H            -> streams_bench         (dryrun/segments accounting)
-  DESIGN §2 (MoE)  -> moe_streams_bench     (streams GMM vs dense loop)
+  §II-D            -> autotune_bench        (tuned vs heuristic blocking)
+  DESIGN.md §7     -> moe_streams_bench     (streams GMM vs dense loop)
   beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
+
+``--dry`` is the CI smoke mode: it imports every module (catching bit-rot in
+the benchmark code itself) and runs only the cheap model-based autotune table
+on a few layers, instead of the full timed sweep.
 """
+import os
 import sys
+import tempfile
 import traceback
 
-from benchmarks import (bwd_wu_layers, fusion_bench, inception_bench,
-                        lm_roofline_table, moe_streams_bench,
+from benchmarks import (autotune_bench, bwd_wu_layers, fusion_bench,
+                        inception_bench, lm_roofline_table, moe_streams_bench,
                         reduced_precision_bench, resnet50_layers,
                         scaling_bench, streams_bench)
 
@@ -28,19 +35,37 @@ MODULES = [
     ("scaling_bench", scaling_bench),
     ("moe_streams_bench", moe_streams_bench),
     ("lm_roofline_table", lm_roofline_table),
+    ("autotune_bench", autotune_bench),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    dry = "--dry" in argv
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in MODULES:
+    if dry:
+        for name, _ in MODULES:
+            print(f"{name},0,IMPORT_OK")
+        if "REPRO_TUNE_CACHE" not in os.environ:
+            # smoke runs must not pollute the user's persistent tuner cache
+            # (that would pre-satisfy autotune_bench's miss->hit round trip)
+            os.environ["REPRO_TUNE_CACHE"] = os.path.join(
+                tempfile.mkdtemp(prefix="repro-dry-"), "cache.json")
         try:
-            mod.main()
+            autotune_bench.main(limit=4)
         except Exception:  # noqa: BLE001
             failures += 1
-            print(f"{name},0,FAILED", file=sys.stdout)
+            print("autotune_bench,0,FAILED", file=sys.stdout)
             traceback.print_exc()
+    else:
+        for name, mod in MODULES:
+            try:
+                mod.main()
+            except Exception:  # noqa: BLE001
+                failures += 1
+                print(f"{name},0,FAILED", file=sys.stdout)
+                traceback.print_exc()
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -9,6 +9,15 @@ The per-shape JIT specialization story of the paper (§II-D) is carried by
 jax.jit itself: every (layer shape × blocking) pair traces and compiles its
 own specialized kernel, on demand, cached — libxsmm's runtime code
 generation, one level up.
+
+The *blocking* each specialization uses is governed by the autotune knob
+(``REPRO_AUTOTUNE`` / ``set_autotune`` / ``use_autotune``):
+
+  "off"    analytic heuristic only (seed behavior; default)
+  "cache"  consult the persistent per-shape tuner cache, analytic on miss
+  "tune"   on a miss, search the blocking space, persist the winner
+
+See ``repro.tune`` and DESIGN.md §6.
 """
 from __future__ import annotations
 
@@ -16,7 +25,15 @@ import os
 from contextlib import contextmanager
 
 _VALID = ("pallas", "interpret", "xla")
+_VALID_AUTOTUNE = ("off", "cache", "tune")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
+_autotune = os.environ.get("REPRO_AUTOTUNE", "off")
+if _autotune not in _VALID_AUTOTUNE:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_AUTOTUNE={_autotune!r} "
+          f"(valid: {', '.join(_VALID_AUTOTUNE)}); autotuning is off",
+          file=sys.stderr)
+    _autotune = "off"
 
 
 def get_backend() -> str:
@@ -44,3 +61,30 @@ def resolve(impl: str | None) -> str:
     impl = impl or _backend
     assert impl in _VALID, impl
     return impl
+
+
+def get_autotune() -> str:
+    return _autotune
+
+
+def set_autotune(mode: str) -> None:
+    global _autotune
+    assert mode in _VALID_AUTOTUNE, mode
+    _autotune = mode
+
+
+@contextmanager
+def use_autotune(mode: str):
+    global _autotune
+    prev = _autotune
+    set_autotune(mode)
+    try:
+        yield
+    finally:
+        _autotune = prev
+
+
+def resolve_autotune(mode: str | None) -> str:
+    mode = mode or _autotune
+    assert mode in _VALID_AUTOTUNE, mode
+    return mode

@@ -1,4 +1,4 @@
-"""Blocking heuristics — the paper's §II-B/C/D RB_P/RB_Q/cache-block choice,
+"""Blocking selection — the paper's §II-B/C/D RB_P/RB_Q/cache-block choice,
 re-derived for the TPU memory hierarchy (HBM -> VMEM -> VREG, MXU 128x128).
 
 The paper picks register blocks to (a) hide FMA latency with independent
@@ -10,6 +10,18 @@ analogous constraints are:
   (b) the per-grid-step working set (input plane slice + weight block +
       output tile + accumulator) must fit the VMEM budget;
   (c) minor dims should be multiples of 128 lanes / 8 sublanes (K, C blocks).
+
+Two selection paths (DESIGN.md §3, §6):
+
+  * ``conv_blocking_analytic`` / ``matmul_blocking_analytic`` — the closed-
+    form heuristic above; always available, and the seed candidate + cost
+    model prior for the tuner.
+  * ``conv_blocking`` / ``matmul_blocking`` — the public entry points.  When
+    autotuning is enabled (``repro.backend`` knob / ``REPRO_AUTOTUNE`` /
+    explicit ``autotune=`` kwarg) they consult ``repro.tune``'s persistent
+    per-shape cache first — "cache": cached winner or analytic fallback;
+    "tune": search-and-persist on a miss — and fall back to the analytic
+    answer otherwise, so callers never see a behavioral cliff.
 """
 from __future__ import annotations
 
@@ -35,22 +47,43 @@ def divisors(x: int):
     return [d for d in range(1, x + 1) if x % d == 0]
 
 
-def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
-                  stride: int, padding: int, dtype_bytes: int = 4,
-                  vmem_budget: int = VMEM_BUDGET,
-                  require_divisor: bool = False) -> ConvBlocking:
+def aligned_block(dim: int) -> int:
+    """Largest sublane-aligned divisor of `dim` within one MXU lane tile —
+    the feature-block choice that every kernel's `dim % blk == 0` assert
+    accepts (non-power-of-two dims like Inception's 192 included)."""
+    # downward over sublane multiples: <= 16 iterations, this runs per dispatch
+    for d in range(min(dim, LANE) - min(dim, LANE) % SUBLANE, 0, -SUBLANE):
+        if dim % d == 0:
+            return d
+    return min(dim, LANE)
+
+
+def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
+                     q: int, rb_p: int, padding: int,
+                     dtype_bytes: int = 4) -> int:
+    """Modeled per-grid-step VMEM bytes for a conv blocking candidate."""
+    hp, wp = h + 2 * padding + r, w + 2 * padding   # padded plane upper bound
+    plane = hp * wp * c * dtype_bytes
+    wblk = r * s * c * k_blk * dtype_bytes
+    out = rb_p * q * k_blk * dtype_bytes
+    acc = rb_p * q * k_blk * 4
+    return plane + wblk + out + acc
+
+
+def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
+                           stride: int, padding: int, dtype_bytes: int = 4,
+                           vmem_budget: int = VMEM_BUDGET,
+                           require_divisor: bool = False) -> ConvBlocking:
+    """Closed-form heuristic (the seed behavior; no cache consulted)."""
     p = (h + 2 * padding - r) // stride + 1
     q = (w + 2 * padding - s) // stride + 1
-    hp, wp = h + 2 * padding + r, w + 2 * padding            # padded plane (upper bound)
-    k_blk = min(k, LANE)
-    c_blk = min(c, LANE)
+    k_blk = aligned_block(k)
+    c_blk = aligned_block(c)
 
     def ws(rb_p: int) -> int:
-        plane = hp * wp * c * dtype_bytes
-        wblk = r * s * c * k_blk * dtype_bytes
-        out = rb_p * q * k_blk * dtype_bytes
-        acc = rb_p * q * k_blk * 4
-        return plane + wblk + out + acc
+        return conv_working_set(h=h, w=w, c=c, k_blk=k_blk, r=r, s=s, q=q,
+                                rb_p=rb_p, padding=padding,
+                                dtype_bytes=dtype_bytes)
 
     cands = divisors(p) if require_divisor else list(range(1, p + 1))
     # smallest rb_p with a full-height MXU M-tile, then grow while VMEM allows
@@ -68,6 +101,39 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
                         vmem_bytes=ws(best))
 
 
+def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
+                  stride: int, padding: int, dtype_bytes: int = 4,
+                  vmem_budget: int = VMEM_BUDGET,
+                  require_divisor: bool = False,
+                  backend: str | None = None,
+                  autotune: str | None = None,
+                  kind: str | None = None,
+                  minibatch: int = 1) -> ConvBlocking:
+    """Public blocking choice: tuned winner when available, else analytic.
+
+    `backend`/`autotune`/`kind`/`minibatch` extend the seed signature; left
+    at defaults they resolve through ``repro.backend`` (autotune defaults
+    "off", preserving the seed's pure-analytic behavior and every existing
+    call site).  `minibatch` is part of the tuning key: the winning blocking
+    depends on how much batch-reuse amortizes weight traffic.
+    """
+    mode = _resolve_autotune(autotune)
+    if mode != "off" and vmem_budget == VMEM_BUDGET:
+        kind = kind or ("wu" if require_divisor else "fwd")
+        blk = _tuned_conv(mode, h=h, w=w, c=c, k=k, r=r, s=s, stride=stride,
+                          padding=padding, dtype_bytes=dtype_bytes, kind=kind,
+                          backend=_resolve_backend(backend),
+                          minibatch=minibatch)
+        if blk is not None:
+            if not require_divisor or _out_p(h, r, stride, padding) % blk.rb_p == 0:
+                return blk
+    return conv_blocking_analytic(h=h, w=w, c=c, k=k, r=r, s=s,
+                                  stride=stride, padding=padding,
+                                  dtype_bytes=dtype_bytes,
+                                  vmem_budget=vmem_budget,
+                                  require_divisor=require_divisor)
+
+
 @dataclasses.dataclass(frozen=True)
 class MatmulBlocking:
     bm: int
@@ -76,8 +142,8 @@ class MatmulBlocking:
     vmem_bytes: int
 
 
-def matmul_blocking(m: int, n: int, k: int, *, dtype_bytes: int = 2,
-                    vmem_budget: int = VMEM_BUDGET) -> MatmulBlocking:
+def matmul_blocking_analytic(m: int, n: int, k: int, *, dtype_bytes: int = 2,
+                             vmem_budget: int = VMEM_BUDGET) -> MatmulBlocking:
     bm = min(m, MXU)
     bn = min(n, MXU)
     # largest bk (multiple of LANE, divisor of k) whose blocks fit VMEM
@@ -89,3 +155,54 @@ def matmul_blocking(m: int, n: int, k: int, *, dtype_bytes: int = 2,
     while bk > LANE and ws(bk) > vmem_budget:
         bk //= 2
     return MatmulBlocking(bm=bm, bn=bn, bk=max(bk, 1), vmem_bytes=ws(bk))
+
+
+def matmul_blocking(m: int, n: int, k: int, *, dtype_bytes: int = 2,
+                    vmem_budget: int = VMEM_BUDGET,
+                    backend: str | None = None,
+                    autotune: str | None = None) -> MatmulBlocking:
+    """Public matmul tiling: tuned winner when available, else analytic."""
+    mode = _resolve_autotune(autotune)
+    if mode != "off" and vmem_budget == VMEM_BUDGET:
+        blk = _tuned_matmul(mode, m, n, k, dtype_bytes=dtype_bytes,
+                            backend=_resolve_backend(backend))
+        if blk is not None:
+            return blk
+    return matmul_blocking_analytic(m, n, k, dtype_bytes=dtype_bytes,
+                                    vmem_budget=vmem_budget)
+
+
+# -- tuner bridge (lazy imports: tune statically imports this module) --------
+
+def _out_p(h: int, r: int, stride: int, padding: int) -> int:
+    return (h + 2 * padding - r) // stride + 1
+
+
+def _resolve_autotune(mode: str | None) -> str:
+    if mode is not None:
+        return mode
+    from repro import backend as be
+    return be.get_autotune()
+
+
+def _resolve_backend(backend: str | None) -> str:
+    if backend is not None:
+        return backend
+    from repro import backend as be
+    return be.get_backend()
+
+
+def _tuned_conv(mode: str, **kw) -> ConvBlocking | None:
+    from repro import tune
+    if mode == "tune":
+        return tune.autotune_conv(**kw)
+    return tune.lookup_conv(**kw)
+
+
+def _tuned_matmul(mode: str, m, n, k, *, dtype_bytes, backend):
+    from repro import tune
+    if mode == "tune":
+        return tune.autotune_matmul(m, n, k, dtype_bytes=dtype_bytes,
+                                    backend=backend)
+    return tune.lookup_matmul(m, n, k, dtype_bytes=dtype_bytes,
+                              backend=backend)

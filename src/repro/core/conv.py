@@ -8,7 +8,9 @@ Backward: custom VJP that implements the paper's training pipeline —
 
 Implementation selection ("xla" / "interpret" / "pallas") is per-call or via
 ``repro.backend``; blocking comes from ``core.blocking`` unless overridden —
-the per-shape JIT specialization of §II-D.
+the per-shape JIT specialization of §II-D.  With the autotune knob enabled
+("cache"/"tune", see ``repro.tune`` and DESIGN.md §6) the blocking is the
+empirically tuned per-shape winner instead of the analytic heuristic.
 """
 from __future__ import annotations
 
@@ -33,8 +35,13 @@ def _lane_ok(c: int, k: int) -> bool:
 
 
 def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
-               shift=None, residual=None, relu=False, impl=None):
-    """Fused forward conv; dispatches on the selected implementation."""
+               shift=None, residual=None, relu=False, impl=None,
+               autotune=None):
+    """Fused forward conv; dispatches on the selected implementation.
+
+    `autotune` (None -> ``repro.backend`` knob) selects how the blocking is
+    chosen: "off" analytic, "cache" tuned-if-cached, "tune" search+persist.
+    """
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
     r, s, _, k = w.shape
@@ -43,23 +50,27 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
                                 bias=bias, scale=scale, shift=shift,
                                 residual=residual, relu=relu)
     blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=r, s=s, stride=stride,
-                        padding=padding, dtype_bytes=x.dtype.itemsize)
+                        padding=padding, dtype_bytes=x.dtype.itemsize,
+                        backend=impl, autotune=autotune, kind="fwd",
+                        minibatch=n)
     return conv2d_direct(x, w, stride=stride, padding=padding, bias=bias,
                          scale=scale, shift=shift, residual=residual,
                          relu=relu, rb_p=blk.rb_p, k_blk=blk.k_blk,
                          interpret=(impl == "interpret"))
 
 
-def conv2d_bwd_data_via_fwd(do, w, *, stride, padding, input_hw, impl=None):
+def conv2d_bwd_data_via_fwd(do, w, *, stride, padding, input_hw, impl=None,
+                            autotune=None):
     """dI using the §II-I duality: transform weights, run the fwd kernel."""
     do2, wt, kw, post = duality.prepare_bwd_data(
         do, w, stride=stride, padding=padding, input_hw=input_hw)
     y = conv2d_fwd(do2, wt, stride=kw["stride"], padding=kw["padding"],
-                   impl=impl)
+                   impl=impl, autotune=autotune)
     return post(y)
 
 
-def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None):
+def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None,
+                       autotune=None):
     """dW via the update-pass kernel (§II-J)."""
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
@@ -69,7 +80,9 @@ def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None):
                                       filter_rs=filter_rs)
     blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=filter_rs[0], s=filter_rs[1],
                         stride=stride, padding=padding,
-                        dtype_bytes=x.dtype.itemsize, require_divisor=True)
+                        dtype_bytes=x.dtype.itemsize, require_divisor=True,
+                        backend=impl, autotune=autotune, kind="wu",
+                        minibatch=n)
     return conv2d_wu(x, do, stride=stride, padding=padding,
                      filter_rs=filter_rs, b_p=blk.rb_p, k_blk=blk.k_blk,
                      interpret=(impl == "interpret"))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import backend as be
+from repro.core.blocking import conv_blocking
 from repro.core.streams import (FLAG_EPILOGUE, FLAG_INIT, FLAG_RELU,
                                 ConvSchedule, build_conv_schedule)
 from repro.kernels.conv2d_direct import pad_input
@@ -110,12 +112,34 @@ def conv2d_streams(x, w, *, schedule: ConvSchedule, stride: int = 1,
 
 
 def conv2d_streams_auto(x, w, *, stride=1, padding=0, bias=None, relu=False,
-                        rb_p=8, k_blk=None, c_blk=None, order="nkpc",
-                        interpret=False):
-    """Dryrun + replay in one call (the common path)."""
+                        rb_p=None, k_blk=None, c_blk=None, order=None,
+                        blocking=None, autotune=None, interpret=False):
+    """Dryrun + replay in one call (the common path).
+
+    Knob precedence: explicitly passed rb_p/k_blk/c_blk/order always win;
+    `blocking` (a ``core.blocking.ConvBlocking``) fills whatever the caller
+    left unset; the seed defaults (rb_p=8, 128-lane feature blocks, "nkpc")
+    fill the rest.  When the caller pins *nothing* and autotuning is on
+    (`autotune` kwarg or the ``repro.backend`` knob), the tuned "streams"
+    blocking supplies the knobs *and* the dryrun loop order — the schedule
+    itself is shape-specialized, not just the tile sizes.
+    """
     n, h, wdt, c = x.shape
     r, s, _, k = w.shape
     p = (h + 2 * padding - r) // stride + 1
+    untouched = rb_p is None and k_blk is None and c_blk is None and order is None
+    if blocking is None and untouched and be.resolve_autotune(autotune) != "off":
+        blocking = conv_blocking(
+            h=h, w=wdt, c=c, k=k, r=r, s=s, stride=stride, padding=padding,
+            dtype_bytes=x.dtype.itemsize, autotune=autotune, kind="streams",
+            backend="interpret" if interpret else "pallas", minibatch=n)
+    if blocking is not None:    # fills only the knobs the caller left unset
+        rb_p = blocking.rb_p if rb_p is None else rb_p
+        k_blk = blocking.k_blk if k_blk is None else k_blk
+        c_blk = blocking.c_blk if c_blk is None else c_blk
+        order = blocking.order if order is None else order
+    rb_p = 8 if rb_p is None else rb_p
+    order = order or "nkpc"
     rb_p_eff = min(rb_p, p)
     k_blk = k_blk or min(k, 128)
     c_blk = c_blk or min(c, 128)

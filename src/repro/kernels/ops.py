@@ -30,9 +30,11 @@ def matmul(a, b, *, bias=None, act="none", residual=None, impl=None):
     impl = be.resolve(impl)
     m, k = a.shape
     n = b.shape[1]
-    blk = matmul_blocking(m, n, k, dtype_bytes=a.dtype.itemsize)
+    if impl == "xla":     # before the blocking choice: no tuner work to waste
+        return ref.matmul_fused(a, b, bias=bias, act=act, residual=residual)
+    blk = matmul_blocking(m, n, k, dtype_bytes=a.dtype.itemsize, backend=impl)
     ok = (m % blk.bm == 0) and (n % blk.bn == 0) and (k % blk.bk == 0)
-    if impl == "xla" or not ok:
+    if not ok:
         return ref.matmul_fused(a, b, bias=bias, act=act, residual=residual)
     return _matmul(a, b, bias=bias, act=act, residual=residual, bm=blk.bm,
                    bn=blk.bn, bk=blk.bk, interpret=(impl == "interpret"))

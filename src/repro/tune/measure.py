@@ -1,0 +1,199 @@
+"""Candidate scoring: wall-clock on real hardware, cost model everywhere else.
+
+On a TPU ("pallas" backend with a TPU device attached) each candidate blocking
+compiles and times the actual kernel — the paper's empirical specialization.
+Under "interpret"/"xla" on CPU, wall time measures the interpreter (or a
+different algorithm entirely), so candidates are ranked by an analytic cost
+model instead:
+
+  t_model = max(t_compute, t_memory) + n_steps * STEP_OVERHEAD
+
+  t_compute  FLOPs / (peak * MXU tile utilization): the M-tile (rb_p*Q rows),
+             N-tile (k_blk lanes) and contraction tile (c_blk) each pay a
+             ceil-to-128 occupancy factor — the paper's "register block must
+             fill the FMA pipeline", re-derived for a 128x128 systolic array.
+  t_memory   HBM traffic from loop-order-aware block refetch counts: a block
+             whose index depends on loop set S is fetched once per iteration
+             of the loops at positions up to S's innermost member (§II-C cache
+             blocking, computed exactly instead of assumed).
+  n_steps    grid size: each step pays a fixed pipeline-fill overhead.
+
+The model is deliberately the same family as ``benchmarks.resnet50_layers.
+modeled_v5e_efficiency`` but blocking-resolved, so tuned-vs-heuristic deltas
+are meaningful even offline.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.blocking import LANE, ConvBlocking, MatmulBlocking
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.tune.space import grid_shape, out_dim
+
+STEP_OVERHEAD_US = 0.5
+
+
+def _tile_util(extent: int) -> float:
+    """Occupancy of a 128-wide MXU dimension holding `extent` elements."""
+    if extent <= 0:
+        return 1.0
+    return extent / (LANE * math.ceil(extent / LANE))
+
+
+def _refetches(dep_positions: list[int], extents: tuple[int, ...]) -> int:
+    """Times a block is (re)fetched over a nested loop: once per iteration of
+    every loop at or outside the innermost dependency *that actually varies*."""
+    live = [p for p in dep_positions if extents[p] > 1]
+    if not live:
+        return 1
+    inner = max(live)
+    n = 1
+    for p in range(inner + 1):
+        n *= extents[p]
+    return n
+
+
+def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
+                 kind: str = "fwd") -> float:
+    """Modeled microseconds for one conv of `shape` under blocking `blk`."""
+    h, w, c, k = shape["h"], shape["w"], shape["c"], shape["k"]
+    r, s = shape["r"], shape["s"]
+    stride, padding = shape["stride"], shape["padding"]
+    dtype_bytes = shape.get("dtype_bytes", 4)
+    p = out_dim(h, r, stride, padding)
+    q = out_dim(w, s, stride, padding)
+    n = minibatch
+
+    c_blk = blk.c_blk if kind == "streams" else c
+    extents = grid_shape(n=n, p=p, c=c, k=k, blk=blk, kind=kind)
+    order = blk.order if kind == "streams" else "nkpc"
+    pos = {dim: i for i, dim in enumerate(order)}
+    # loop extents arranged in schedule order
+    by_dim = {"n": extents[0], "k": extents[1], "p": extents[2],
+              "c": extents[3]}
+    ordered = tuple(by_dim[d] for d in order)
+
+    # compute: every grid step runs the full (r,s) small-GEMM chain
+    flops = 2.0 * n * p * q * c * k * r * s
+    util = (_tile_util(blk.rb_p * q) * _tile_util(blk.k_blk)
+            * _tile_util(c_blk))
+    t_comp = flops / (PEAK_FLOPS * max(util, 1e-3))
+
+    # memory: block bytes x loop-order-exact refetch counts
+    hp, wp = h + 2 * padding + r, w + 2 * padding
+    x_bytes = hp * wp * c_blk * dtype_bytes
+    w_bytes = r * s * c_blk * blk.k_blk * dtype_bytes
+    o_bytes = blk.rb_p * q * blk.k_blk * 4          # f32 accumulator tile
+    x_f = _refetches([pos["n"], pos["c"]], ordered)
+    w_f = _refetches([pos["k"], pos["c"]], ordered)
+    o_f = _refetches([pos["n"], pos["k"], pos["p"]], ordered)
+    revisit = max(extents[3], 1)
+    # a revisited output tile is read back and rewritten on each extra visit
+    o_traffic = o_bytes * o_f * (2 * revisit - 1 if kind == "streams" else 1)
+    t_mem = (x_bytes * x_f + w_bytes * w_f + o_traffic) / HBM_BW
+
+    n_steps = 1
+    for e in extents:
+        n_steps *= e
+    return (max(t_comp, t_mem)) * 1e6 + n_steps * STEP_OVERHEAD_US
+
+
+def matmul_cost_us(m: int, n: int, k: int, blk: MatmulBlocking, *,
+                   dtype_bytes: int = 2) -> float:
+    flops = 2.0 * m * n * k
+    util = (_tile_util(blk.bm) * _tile_util(blk.bn)
+            * _tile_util(min(blk.bk, LANE)))
+    t_comp = flops / (PEAK_FLOPS * max(util, 1e-3))
+    g_m, g_n, g_k = m // blk.bm, n // blk.bn, k // blk.bk
+    traffic = (g_n * (m * k) + g_m * (k * n)) * dtype_bytes + m * n * 4
+    t_mem = traffic / HBM_BW
+    return max(t_comp, t_mem) * 1e6 + g_m * g_n * g_k * STEP_OVERHEAD_US
+
+
+# -- real-kernel timing (TPU path) -------------------------------------------
+
+def can_measure(backend: str) -> bool:
+    """Wall-clock only means something when the real kernel actually runs."""
+    if backend != "pallas":
+        return False
+    try:
+        import jax
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def measure_conv_us(shape: dict, blk: ConvBlocking, *, kind: str = "fwd",
+                    minibatch: int = 1, warmup: int = 2,
+                    iters: int = 5) -> float:
+    """Compile and time the real kernel for one candidate (TPU only)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.conv2d_direct import conv2d_direct
+    from repro.kernels.conv2d_streams import conv2d_streams_auto
+    from repro.kernels.conv2d_wu import conv2d_wu
+
+    rng = np.random.default_rng(0)
+    h, w, c, k = shape["h"], shape["w"], shape["c"], shape["k"]
+    r, s = shape["r"], shape["s"]
+    stride, padding = shape["stride"], shape["padding"]
+    x = jnp.asarray(rng.standard_normal((minibatch, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((r, s, c, k)) * 0.1, jnp.float32)
+
+    if kind == "streams":
+        # blocking= pins all four knobs AND skips the autotune consult —
+        # re-entering the tuner mid-measurement would recurse on the same
+        # not-yet-cached key.
+        fn = jax.jit(lambda x, wt: conv2d_streams_auto(
+            x, wt, stride=stride, padding=padding, blocking=blk))
+    elif kind == "wu":
+        p = out_dim(h, r, stride, padding)
+        q = out_dim(w, s, stride, padding)
+        do = jnp.asarray(rng.standard_normal((minibatch, p, q, k)),
+                         jnp.float32)
+        fn = jax.jit(lambda x, do: conv2d_wu(
+            x, do, stride=stride, padding=padding, filter_rs=(r, s),
+            b_p=blk.rb_p, k_blk=blk.k_blk))
+        wt = do
+    else:
+        fn = jax.jit(lambda x, wt: conv2d_direct(
+            x, wt, stride=stride, padding=padding, rb_p=blk.rb_p,
+            k_blk=blk.k_blk))
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(x, wt))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x, wt))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def rank_conv(shape: dict, candidates: list[ConvBlocking], *,
+              kind: str = "fwd", backend: str = "xla", minibatch: int = 1,
+              measure_top: int = 8) -> list[tuple[float, ConvBlocking]]:
+    """Score candidates; returns (score_us, blocking) sorted best-first.
+
+    Model scores everywhere; on TPU the model shortlists `measure_top`
+    candidates which are then re-ranked by real wall clock.
+    """
+    scored = sorted(
+        ((conv_cost_us(shape, b, minibatch=minibatch, kind=kind), b)
+         for b in candidates), key=lambda t: t[0])
+    if not can_measure(backend):
+        return scored
+    timed = []
+    for _, b in scored[:measure_top]:
+        try:
+            timed.append((measure_conv_us(shape, b, kind=kind,
+                                          minibatch=minibatch), b))
+        except Exception:  # noqa: BLE001 — candidate failed to compile
+            continue
+    timed.sort(key=lambda t: t[0])
+    return timed or scored

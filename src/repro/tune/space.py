@@ -1,0 +1,139 @@
+"""Blocking search space (paper §II-D: the per-shape specialization axis).
+
+For a conv layer the tunable coordinates are exactly the knobs the Pallas
+kernels expose:
+
+  rb_p   output rows per microkernel (paper RB_P; MXU M-tile = rb_p*Q)
+  k_blk  output-feature block (paper K_b; MXU N-tile, must divide K)
+  c_blk  input-feature block (streams kernel only; must divide C)
+  order  dryrun loop order over (N, K_b, P_b, C_b) (paper §II-C)
+
+``conv_candidates`` enumerates the feasible cross product — VMEM-budget
+filtered, lane-aligned, divisibility-respecting — with the analytic heuristic
+first, so it is both the cost-model prior and the seed the search can never
+do worse than.  Kinds:
+
+  "fwd"     conv2d_direct forward: C unblocked, grid order fixed (N,K_b,P_b)
+  "wu"      conv2d_wu update pass: rb_p must divide P
+  "streams" conv2d_streams: all four coordinates free
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.blocking import (LANE, SUBLANE, VMEM_BUDGET, ConvBlocking,
+                                 MatmulBlocking, conv_blocking_analytic,
+                                 conv_working_set, divisors,
+                                 matmul_blocking_analytic)
+
+ORDERS = ("nkpc", "npkc", "knpc", "pknc")
+MAX_CANDIDATES = 128
+
+
+def out_dim(h: int, r: int, stride: int, padding: int) -> int:
+    return (h + 2 * padding - r) // stride + 1
+
+
+def _feature_blocks(dim: int) -> list[int]:
+    """Divisors of `dim` that are sublane-aligned and at most one MXU tile."""
+    blocks = [d for d in divisors(dim) if d % SUBLANE == 0 and d <= LANE]
+    return blocks or [dim]          # tiny dims: single un-aligned block
+
+
+def _rb_candidates(p: int, *, require_divisor: bool) -> list[int]:
+    if require_divisor:
+        cands = divisors(p)
+    else:
+        # divisors (exact grids) + powers of two (ceil-div grids) + full P
+        cands = set(divisors(p))
+        rb = 1
+        while rb < p:
+            cands.add(rb)
+            rb *= 2
+        cands.add(p)
+        cands = sorted(cands)
+    if len(cands) > 12:             # spread-sample large spatial dims
+        step = len(cands) / 12
+        cands = sorted({cands[int(i * step)] for i in range(12)} | {cands[-1]})
+    return cands
+
+
+def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
+                    stride: int, padding: int, dtype_bytes: int = 4,
+                    kind: str = "fwd",
+                    vmem_budget: int = VMEM_BUDGET) -> list[ConvBlocking]:
+    """Feasible blockings, analytic seed first, deduplicated, budget-capped."""
+    assert kind in ("fwd", "wu", "streams"), kind
+    p = out_dim(h, r, stride, padding)
+    q = out_dim(w, s, stride, padding)
+    seed = conv_blocking_analytic(
+        h=h, w=w, c=c, k=k, r=r, s=s, stride=stride, padding=padding,
+        dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
+        require_divisor=(kind == "wu"))
+
+    k_blocks = _feature_blocks(k)
+    c_blocks = _feature_blocks(c) if kind == "streams" else [c]
+    orders = ORDERS if kind == "streams" else (seed.order,)
+    rbs = _rb_candidates(max(p, 1), require_divisor=(kind == "wu"))
+
+    out: list[ConvBlocking] = [seed]
+    seen = {(seed.rb_p, seed.k_blk, seed.c_blk, seed.order)}
+    for rb in rbs:
+        for kb in k_blocks:
+            for cb in c_blocks:
+                ws = conv_working_set(
+                    h=h, w=w, c=cb if kind == "streams" else c, k_blk=kb,
+                    r=r, s=s, q=q, rb_p=rb, padding=padding,
+                    dtype_bytes=dtype_bytes)
+                if ws > vmem_budget:
+                    continue
+                for order in orders:
+                    key = (rb, kb, cb, order)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    out.append(ConvBlocking(rb_p=rb, k_blk=kb, c_blk=cb,
+                                            order=order, vmem_bytes=ws))
+    return out[:MAX_CANDIDATES]
+
+
+def matmul_candidates(m: int, n: int, k: int, *, dtype_bytes: int = 2,
+                      vmem_budget: int = VMEM_BUDGET) -> list[MatmulBlocking]:
+    """Tile candidates for the fused matmul kernel (bm/bn/bk must divide)."""
+    seed = matmul_blocking_analytic(m, n, k, dtype_bytes=dtype_bytes,
+                                    vmem_budget=vmem_budget)
+
+    def largest_divisor(dim: int, cap: int) -> int:
+        return max(d for d in divisors(dim) if d <= cap)
+
+    bms = [d for d in (64, 128, 256) if m % d == 0] or [largest_divisor(m, 256)]
+    bns = [d for d in (64, 128, 256) if n % d == 0] or [largest_divisor(n, 256)]
+    bks = ([d for d in (128, 256, 512, 1024) if k % d == 0]
+           or [largest_divisor(k, 1024)])
+
+    def ws(bm, bn, bk):
+        return (bm * bk + bk * bn) * dtype_bytes + 2 * bm * bn * 4
+
+    # the analytic seed joins the pool only if it tiles the problem exactly —
+    # callers (ops.matmul) fall back to the reference path otherwise, so a
+    # persisted non-dividing winner would be a permanently rejected entry
+    out, seen = [], set()
+    if m % seed.bm == 0 and n % seed.bn == 0 and k % seed.bk == 0:
+        out.append(seed)
+        seen.add((seed.bm, seed.bn, seed.bk))
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                if (bm, bn, bk) in seen or ws(bm, bn, bk) > vmem_budget:
+                    continue
+                seen.add((bm, bn, bk))
+                out.append(MatmulBlocking(bm=bm, bn=bn, bk=bk,
+                                          vmem_bytes=ws(bm, bn, bk)))
+    return out[:MAX_CANDIDATES] or [seed]
+
+
+def grid_shape(*, n: int, p: int, c: int, k: int,
+               blk: ConvBlocking, kind: str) -> tuple[int, ...]:
+    """Loop extents (N, K_b, P_b, C_b) a blocking induces."""
+    c_b = c // blk.c_blk if kind == "streams" else 1
+    return (n, max(k // blk.k_blk, 1), math.ceil(p / blk.rb_p), max(c_b, 1))

@@ -1,0 +1,153 @@
+"""Offline fallback for ``hypothesis``.
+
+The property tests import ``from hypothesis import given, settings,
+strategies as st``.  When the real wheel is absent (air-gapped CI, minimal
+containers), ``install()`` registers this module as ``hypothesis`` in
+``sys.modules`` *before collection* (see conftest.py), providing the same
+surface over deterministic fixed example draws:
+
+  * each ``@given`` test runs ``max_examples`` times with values drawn from
+    a ``random.Random`` seeded by the test's qualified name — stable across
+    runs and machines, so failures reproduce;
+  * the falsifying draw is printed before the exception propagates;
+  * ``assume(False)`` skips just that draw, like the real library.
+
+No shrinking, no database, no health checks — this is a shim, not a
+replacement; with the real package installed it is never activated.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume() to discard the current draw."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return SearchStrategy(lambda r: fn(self._draw(r)))
+
+    def filter(self, pred):
+        def draw(r):
+            for _ in range(100):
+                v = self._draw(r)
+                if pred(v):
+                    return v
+            raise _Unsatisfied
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda r: r.choice(elements))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda r: r.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.uniform(min_value, max_value))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda r: value)
+
+
+def one_of(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda r: r.choice(strategies).example(r))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> SearchStrategy:
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.example(r) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda r: tuple(s.example(r) for s in strategies))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator recording max_examples on the (given-wrapped) test."""
+    def deco(fn):
+        fn._hc_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test over deterministic fixed draws.
+
+    The wrapper takes no parameters (pytest must not mistake the strategy
+    names for fixtures), so @given cannot be combined with fixtures here —
+    none of this repo's property tests do.
+    """
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_hc_max_examples", DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(zlib.crc32(
+                getattr(fn, "__qualname__", fn.__name__).encode()))
+            for i in range(n):
+                pos = [s.example(rnd) for s in arg_strategies]
+                kw = {name: s.example(rnd)
+                      for name, s in kw_strategies.items()}
+                try:
+                    fn(*pos, **kw)
+                except _Unsatisfied:
+                    continue
+                except Exception:
+                    print(f"\nFalsifying example ({fn.__name__}, "
+                          f"draw {i + 1}/{n}): args={pos} kwargs={kw}")
+                    raise
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        return runner
+    return deco
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+`.strategies`) in sys.modules."""
+    import sys
+    import types
+
+    if "hypothesis" in sys.modules:
+        return
+    mod = sys.modules[__name__]
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats", "just",
+                 "one_of", "lists", "tuples"):
+        setattr(strategies, name, getattr(mod, name))
+    shim = types.ModuleType("hypothesis")
+    shim.given = given
+    shim.settings = settings
+    shim.assume = assume
+    shim.strategies = strategies
+    shim.__is_repro_shim__ = True
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = strategies

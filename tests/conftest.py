@@ -5,6 +5,21 @@ import os
 # tests — never globally here.
 os.environ.setdefault("REPRO_BACKEND", "xla")
 
+# Isolate the autotuner cache: tests must never read or pollute the user's
+# persistent ~/.cache tuner state (individual tests monkeypatch as needed).
+import tempfile  # noqa: E402
+os.environ.setdefault(
+    "REPRO_TUNE_CACHE",
+    os.path.join(tempfile.mkdtemp(prefix="repro-tune-test-"), "cache.json"))
+
+# Offline environments have no `hypothesis` wheel; install the deterministic
+# fixed-draw shim before collection so the property-test modules import.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_compat
+    _hypothesis_compat.install()
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 

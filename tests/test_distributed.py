@@ -73,10 +73,13 @@ def test_compressed_psum_error_feedback():
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import compressed_psum
         import jax, jax.numpy as jnp, numpy as np
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # pre-0.5 jax keeps it in experimental
+            from jax.experimental.shard_map import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
+        @partial(shard_map, mesh=mesh, in_specs=P("data"),
                  out_specs=P("data"))
         def allreduce_q(gs):
             out, resid = compressed_psum(gs[0], "data")
