@@ -8,12 +8,14 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   §II-G/GxM        -> fusion_bench          (fused vs unfused + ETG stats)
   §II-H            -> streams_bench         (dryrun/segments accounting)
   §II-D            -> autotune_bench        (tuned vs heuristic blocking)
+  §III serving     -> serve_cnn_bench       (images/sec × batch × devices)
   DESIGN.md §7     -> moe_streams_bench     (streams GMM vs dense loop)
   beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
 
 ``--dry`` is the CI smoke mode: it imports every module (catching bit-rot in
-the benchmark code itself) and runs only the cheap model-based autotune table
-on a few layers, instead of the full timed sweep.
+the benchmark code itself) and runs only the cheap fast-path tables — the
+model-based autotune table on a few layers and the tiny-topology serving
+throughput table — instead of the full timed sweep.
 """
 import os
 import sys
@@ -23,7 +25,7 @@ import traceback
 from benchmarks import (autotune_bench, bwd_wu_layers, fusion_bench,
                         inception_bench, lm_roofline_table, moe_streams_bench,
                         reduced_precision_bench, resnet50_layers,
-                        scaling_bench, streams_bench)
+                        scaling_bench, serve_cnn_bench, streams_bench)
 
 MODULES = [
     ("resnet50_layers", resnet50_layers),
@@ -36,6 +38,7 @@ MODULES = [
     ("moe_streams_bench", moe_streams_bench),
     ("lm_roofline_table", lm_roofline_table),
     ("autotune_bench", autotune_bench),
+    ("serve_cnn_bench", serve_cnn_bench),
 ]
 
 
@@ -57,6 +60,12 @@ def main(argv=None) -> None:
         except Exception:  # noqa: BLE001
             failures += 1
             print("autotune_bench,0,FAILED", file=sys.stdout)
+            traceback.print_exc()
+        try:
+            serve_cnn_bench.main(["--dry"])
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print("serve_cnn_bench,0,FAILED", file=sys.stdout)
             traceback.print_exc()
     else:
         for name, mod in MODULES:

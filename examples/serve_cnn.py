@@ -1,0 +1,17 @@
+"""CNN serving example: continuous-batching image recognition over the GxM
+executor (see launch/serve_cnn.py for the scheduler and DESIGN.md §8 for the
+request lifecycle).  Warmup pre-tunes the per-shape blocking cache and
+AOT-compiles every bucket before the first request is served.
+
+  PYTHONPATH=src python examples/serve_cnn.py --smoke
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python examples/serve_cnn.py --smoke   # 2-way sharding
+"""
+import sys
+
+from repro.launch.serve_cnn import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "resnet50", "--smoke",
+                            "--requests", "24", "--max-batch", "8"]
+    main(argv)

@@ -28,9 +28,11 @@ from repro.kernels.conv2d_direct import conv2d_direct
 from repro.kernels.conv2d_wu import conv2d_wu
 
 
-def _lane_ok(c: int, k: int) -> bool:
-    # Pallas path wants feature dims that block cleanly; small-C layers
-    # (e.g. ResNet conv1, C=3) take the XLA/im2col path — see DESIGN.md §2.
+def lane_ok(c: int, k: int) -> bool:
+    """True when (C, K) block cleanly for the Pallas kernels; small-C layers
+    (e.g. ResNet conv1, C=3) take the XLA/im2col path — see DESIGN.md §2.
+    Public so warmup/serving can report which signatures the tuned path
+    covers (``graph/serving.py``)."""
     return c % 8 == 0 and k % 8 == 0
 
 
@@ -45,7 +47,7 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
     r, s, _, k = w.shape
-    if impl == "xla" or not _lane_ok(c, k):
+    if impl == "xla" or not lane_ok(c, k):
         return ref.conv2d_fused(x, w, stride=stride, padding=padding,
                                 bias=bias, scale=scale, shift=shift,
                                 residual=residual, relu=relu)
@@ -75,7 +77,7 @@ def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None,
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
     _, p, q, k = do.shape
-    if impl == "xla" or not _lane_ok(c, k):
+    if impl == "xla" or not lane_ok(c, k):
         return ref.conv2d_bwd_weights(x, do, stride=stride, padding=padding,
                                       filter_rs=filter_rs)
     blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=filter_rs[0], s=filter_rs[1],

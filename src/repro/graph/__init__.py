@@ -1,3 +1,6 @@
 from repro.graph.topology import resnet50, inception_v3, RESNET50_LAYERS
 from repro.graph.etg import build_etg
 from repro.graph.executor import GxM
+from repro.graph.serving import (CnnInferenceEngine, conv_shapes,
+                                 cnn_model_flops, distinct_conv_signatures,
+                                 make_buckets, pick_bucket)

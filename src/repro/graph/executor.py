@@ -1,10 +1,15 @@
-"""GxM executor: runs an ETG forward (training or inference), with the
-backward/update passes coming from the conv tasks' custom VJPs (duality +
-update-pass kernels).  Functional: params are a pytree keyed by node name.
+"""GxM executor: runs an ETG forward for both training and inference
+serving.  Functional: params are a pytree keyed by node name.
 
-Training-mode BatchNorm uses batch statistics (and contributes running-stat
-updates); inference mode folds BN into the conv epilogue (scale/shift) — the
-fused path the paper benchmarks.
+Training: the backward/update passes come from the conv tasks' custom VJPs
+(duality + update-pass kernels); BatchNorm uses batch statistics and
+contributes running-stat updates.
+
+Inference/serving: BN is folded into the conv epilogue (scale/shift) — the
+fused path the paper benchmarks — and ``make_infer`` exposes it as a
+jit-able entry point with a donated input buffer and optional data-parallel
+``shard_map`` over a mesh.  ``graph/serving.py`` wraps it with bucketed
+batching and cache warmup for the CNN serving path (``launch/serve_cnn.py``).
 """
 from __future__ import annotations
 
@@ -16,6 +21,13 @@ import numpy as np
 
 from repro.core.conv import conv2d_train, conv2d_fwd
 from repro.graph.etg import ETG, build_etg
+
+
+def _shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:    # pre-0.5 jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
 
 
 def _maxpool(x, window, stride, padding):
@@ -164,6 +176,28 @@ class GxM:
         if collect_stats:
             return result, stats
         return result
+
+    # -- inference serving entry ---------------------------------------------
+    def infer(self, params, x):
+        """Inference forward: BN folded from running stats, fused epilogues."""
+        return self.forward(params, x, train=False)
+
+    def make_infer(self, *, mesh=None, axis: str = "data",
+                   donate_input: bool = True):
+        """Jit'd inference entry point for the serving path.
+
+        With ``mesh``, the batch is data-parallel sharded over ``axis`` via
+        ``shard_map`` (params replicated); the caller guarantees the batch
+        divides the axis size (``graph/serving.py`` buckets do).  The image
+        buffer is donated — serving re-pads a fresh batch every step, so the
+        executor may reuse its memory for activations.
+        """
+        fwd = self.infer
+        if mesh is not None:
+            P = jax.sharding.PartitionSpec
+            fwd = _shard_map()(fwd, mesh=mesh, in_specs=(P(), P(axis)),
+                               out_specs=P(axis), check_rep=False)
+        return jax.jit(fwd, donate_argnums=(1,) if donate_input else ())
 
     # -- loss / steps ---------------------------------------------------------
     def loss(self, params, batch, *, train=True, collect_stats=False):

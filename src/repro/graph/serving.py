@@ -1,0 +1,255 @@
+"""CNN inference serving machinery over the GxM executor (DESIGN.md §8).
+
+The paper's second half integrates the JIT'd conv kernels into the GxM
+graph flow and reports *image throughput*; this module is the deployment
+side of that story:
+
+* **Bucketed batching** — requests are padded to a small fixed set of
+  batch-size buckets so every bucket hits exactly one jitted, autotune-
+  warmed executor.  The bucket set is finite, so the set of (shape ×
+  blocking) specializations — and of autotuner cache keys — is finite too.
+* **Data-parallel sharding** — each bucket's batch is split across the
+  local devices of a ``launch.mesh.make_host_mesh`` mesh via ``shard_map``;
+  inference has no cross-batch collectives, so scaling is embarrassing.
+* **Warmup** — ``CnnInferenceEngine.warmup`` walks every conv signature of
+  the network (shape-inferred from the ETG) and pre-populates both the
+  per-shape blocking cache (``repro.tune``) and the jit executable cache
+  (AOT lower+compile per bucket), so the request path never tunes,
+  traces, or compiles.
+
+``launch/serve_cnn.py`` builds the request queue / scheduler on top.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backend as be
+from repro import tune
+from repro.core.conv import lane_ok
+
+
+def _out(dim: int, f: int, stride: int, padding: int) -> int:
+    return (dim + 2 * padding - f) // stride + 1
+
+
+def conv_shapes(etg, image_hw) -> list[dict]:
+    """Per-conv-task full tuning shapes, inferred by walking the ETG.
+
+    ``etg.kernel_cache`` dedups convs by (c,k,r,s,stride,padding,fused) but
+    carries no spatial extent; the tuner key needs (h, w) too, so we run the
+    ETG symbolically from the network input size.  Returns one dict per conv
+    task (h/w are the conv's *input* plane) with its dedup ``kernel_id``.
+    """
+    h0, w0 = image_hw
+    hw: dict[str, tuple | None] = {"input": (h0, w0)}
+    shapes = []
+    for t in etg.tasks:
+        a = t.attrs
+        if t.op == "input":
+            hw[t.name] = (h0, w0)
+            continue
+        src = hw.get(t.inputs[0]) if t.inputs else None
+        if t.op == "conv":
+            h, w = src
+            shapes.append(dict(name=t.name, h=h, w=w, c=a["c"], k=a["k"],
+                               r=a["r"], s=a["s"], stride=a["stride"],
+                               padding=a["padding"],
+                               kernel_id=a.get("kernel_id")))
+            res = (_out(h, a["r"], a["stride"], a["padding"]),
+                   _out(w, a["s"], a["stride"], a["padding"]))
+        elif t.op == "maxpool":
+            h, w = src
+            res = (_out(h, a["window"], a["stride"], a["padding"]),
+                   _out(w, a["window"], a["stride"], a["padding"]))
+        elif t.op in ("avgpool", "fc"):
+            res = None                      # rank-2 from here on
+        else:                               # bn / relu / add / split / concat
+            res = src
+        hw[t.name] = res
+        if "output_name" in a:
+            hw[a["output_name"]] = res
+    return shapes
+
+
+def distinct_conv_signatures(shapes: list[dict]) -> list[dict]:
+    """Dedup conv shapes down to the tuner key coordinates."""
+    seen, out = set(), []
+    for sh in shapes:
+        sig = (sh["h"], sh["w"], sh["c"], sh["k"], sh["r"], sh["s"],
+               sh["stride"], sh["padding"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append({f: sh[f] for f in ("h", "w", "c", "k", "r", "s",
+                                       "stride", "padding")})
+    return out
+
+
+def cnn_model_flops(etg, image_hw, batch: int) -> float:
+    """Useful model FLOPs of one inference forward: 2·P·Q·K·C·R·S per conv
+    plus 2·C·K for the classifier — the numerator of roofline efficiency."""
+    total = 0.0
+    for sh in conv_shapes(etg, image_hw):
+        p = _out(sh["h"], sh["r"], sh["stride"], sh["padding"])
+        q = _out(sh["w"], sh["s"], sh["stride"], sh["padding"])
+        total += 2.0 * p * q * sh["k"] * sh["c"] * sh["r"] * sh["s"]
+    for t in etg.tasks:
+        if t.op == "fc":
+            total += 2.0 * t.attrs["c"] * t.attrs["k"]
+    return total * batch
+
+
+# -- bucketing ---------------------------------------------------------------
+
+def make_buckets(max_batch: int, *, num_shards: int = 1) -> tuple[int, ...]:
+    """Geometric bucket ladder; every bucket is a multiple of ``num_shards``
+    so a padded batch always splits evenly across the data-parallel mesh."""
+    assert max_batch >= 1 and num_shards >= 1
+    b, out = num_shards, []
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(b)
+    return tuple(out)
+
+
+def pick_bucket(n: int, buckets) -> int:
+    """Smallest bucket that fits ``n`` requests (minimal padding); callers
+    with ``n`` beyond the largest bucket chunk the batch first."""
+    for b in sorted(buckets):
+        if b >= n:
+            return b
+    return max(buckets)
+
+
+class CnnInferenceEngine:
+    """Bucketed, sharded, warmup-able inference front-end for one GxM model.
+
+    ``infer(images)`` pads the batch to the minimal bucket, runs the
+    AOT-compiled executor for that bucket (data-parallel over ``mesh``'s
+    "data" axis when given), and returns only the real lanes' logits —
+    padded lanes are all-zero images whose outputs are sliced away and,
+    because inference has no cross-batch ops (BN folded from running
+    stats), cannot perturb real lanes.
+    """
+
+    def __init__(self, gxm, params, *, image_hw=(224, 224), mesh=None,
+                 max_batch: int = 32, buckets=None, dtype=jnp.float32,
+                 donate_input: bool | None = None,
+                 autotune: str | None = "cache"):
+        self.gxm = gxm
+        self.params = params
+        self.image_hw = tuple(image_hw)
+        self.mesh = mesh
+        self.dtype = dtype
+        # mode scoped around every trace/compile so the kernels' blocking
+        # lookups see the entries warmup persisted ("cache": warmed winner
+        # or analytic fallback — never a behavioral cliff); None defers to
+        # the global REPRO_AUTOTUNE knob
+        self.autotune = autotune
+        self.num_shards = int(mesh.shape.get("data", 1)) if mesh is not None \
+            else 1
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            make_buckets(max_batch, num_shards=self.num_shards)
+        assert all(b % self.num_shards == 0 for b in self.buckets), \
+            (self.buckets, self.num_shards)
+        if donate_input is None:
+            # donation is a no-op (plus a warning) on CPU backends
+            donate_input = jax.default_backend() not in ("cpu",)
+        self._fn = gxm.make_infer(mesh=mesh, donate_input=donate_input)
+        self._compiled: dict[int, object] = {}
+
+    # -- shape / signature plumbing -----------------------------------------
+    def local_batch(self, bucket: int) -> int:
+        """Per-device batch a bucket lowers to inside shard_map — the
+        ``minibatch`` coordinate of the autotuner cache key."""
+        return bucket // self.num_shards
+
+    def conv_shapes(self) -> list[dict]:
+        return conv_shapes(self.gxm.etg, self.image_hw)
+
+    # -- warmup --------------------------------------------------------------
+    def warmup(self, *, autotune: str = "tune", cache=None,
+               compile_buckets: bool = True) -> dict:
+        """Pre-populate every cache a request would otherwise fall into:
+
+        1. the persistent per-shape blocking cache (``repro.tune``) for every
+           distinct conv signature × per-device bucket batch, and
+        2. the compiled-executable cache: one AOT lower+compile per bucket
+           (which also exercises the ETG's dedup'd ``kernel_cache`` ids),
+           traced under this engine's ``autotune`` scope so the blocking
+           lookups consult what step 1 just persisted.
+
+        ``cache`` overrides the tuning *store* (tests / inspection); the
+        compile-time lookups always read the process default cache
+        (``REPRO_TUNE_CACHE``), so pass ``cache`` only together with that
+        env override if the compiled blockings must match.  Returns a
+        report dict (entry counts, compile seconds per bucket).
+        """
+        backend = be.resolve(self.gxm.impl)
+        sigs = distinct_conv_signatures(self.conv_shapes())
+        report = {
+            "conv_signatures": len(sigs),
+            "pallas_path_signatures":
+                sum(1 for s in sigs if lane_ok(s["c"], s["k"])),
+            "kernel_cache_entries": len(self.gxm.etg.kernel_cache),
+            "buckets": list(self.buckets),
+            "tune_entries": 0,
+            "compile_s": {},
+        }
+        if autotune != "off":
+            minibatches = sorted({self.local_batch(b) for b in self.buckets})
+            entries = tune.warmup_convs(sigs, minibatches=minibatches,
+                                        mode=autotune, backend=backend,
+                                        cache=cache)
+            report["tune_entries"] = sum(1 for e in entries if e["cached"])
+        if compile_buckets:
+            for bucket in self.buckets:
+                t0 = time.perf_counter()
+                self._ensure_compiled(bucket)
+                report["compile_s"][bucket] = round(
+                    time.perf_counter() - t0, 3)
+        return report
+
+    def _autotune_scope(self):
+        if self.autotune is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return be.use_autotune(self.autotune)
+
+    def _ensure_compiled(self, bucket: int):
+        if bucket not in self._compiled:
+            x = jax.ShapeDtypeStruct(
+                (bucket, *self.image_hw, 3), self.dtype)
+            with self._autotune_scope():
+                self._compiled[bucket] = \
+                    self._fn.lower(self.params, x).compile()
+        return self._compiled[bucket]
+
+    def aot_executable(self, bucket: int):
+        """Compiled executable for one bucket (rooflines read its HLO)."""
+        assert bucket in self.buckets, (bucket, self.buckets)
+        return self._ensure_compiled(bucket)
+
+    # -- the request path ----------------------------------------------------
+    def infer(self, images):
+        """Logits for ``images`` (n, H, W, 3); pads n up to the minimal
+        bucket, runs that bucket's warmed executable, slices padding away."""
+        x = np.asarray(images, dtype=self.dtype)
+        n = x.shape[0]
+        if n > max(self.buckets):
+            raise ValueError(f"batch {n} exceeds largest bucket "
+                             f"{max(self.buckets)}; chunk it first")
+        bucket = pick_bucket(n, self.buckets)
+        if n < bucket:
+            x = np.concatenate(
+                [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)])
+        fn = self._compiled.get(bucket)
+        if fn is not None:
+            return fn(self.params, jnp.asarray(x))[:n]
+        with self._autotune_scope():      # unwarmed bucket: trace here
+            return self._fn(self.params, jnp.asarray(x))[:n]

@@ -126,8 +126,17 @@ class Roofline:
     _chips: int = 256
 
 
-def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts, newer ones a flat dict."""
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     colls = parse_collectives(compiled.as_text(), default_group=chips)

@@ -1,4 +1,7 @@
-"""Batched serving driver: continuous-batching prefill + decode loop.
+"""Batched LM serving driver — the *language-model* path: continuous-
+batching prefill + lockstep decode over a shared KV cache.  The CNN/image
+path (bucketed batching over the GxM executor) lives in
+``launch/serve_cnn.py``.
 
   python -m repro.launch.serve --arch qwen2-1.5b --smoke --requests 4
 

@@ -89,6 +89,50 @@ def autotune_conv(*, h, w, c, k, r, s, stride, padding, dtype_bytes=4,
     return best
 
 
+def warmup_convs(shapes, *, minibatches=(1,), kinds=("fwd",), mode="tune",
+                 backend=None, cache: TuneCache | None = None,
+                 dtype_bytes=4) -> list[dict]:
+    """Pre-populate the blocking cache for conv ``shapes`` — the serving
+    warmup entry (DESIGN.md §8).
+
+    ``shapes``: dicts with h/w/c/k/r/s/stride/padding (e.g. from
+    ``graph.serving.conv_shapes``).  One entry is tuned per shape × ``kinds``
+    × ``minibatches`` — minibatch is part of the cache key, so serving warms
+    exactly the per-device batch of every bucket it will run.  ``mode``
+    follows the knob semantics: "tune" searches+persists on a miss, "cache"
+    only reports what is already there.  All new entries are persisted in one
+    atomic write at the end.  Returns one report dict per key:
+    ``{"key", "cached", "source"}``.
+    """
+    from repro import backend as be
+    backend = be.resolve(backend)
+    cache = default_cache() if cache is None else cache
+    report = []
+    for sh in shapes:
+        base = {f: sh[f] for f in ("h", "w", "c", "k", "r", "s",
+                                   "stride", "padding")}
+        db = sh.get("dtype_bytes", dtype_bytes)
+        for kind in kinds:
+            for mb in minibatches:
+                if mode == "tune":
+                    autotune_conv(**base, dtype_bytes=db, kind=kind,
+                                  backend=backend, minibatch=mb, cache=cache,
+                                  persist=False)
+                key = conv_key(kind=kind, **base, dtype_bytes=db,
+                               backend=backend, minibatch=mb)
+                entry = cache.lookup(key)
+                report.append({"key": key, "cached": entry is not None,
+                               "source": entry["source"] if entry else None})
+    if mode == "tune" and any(e["cached"] for e in report):
+        try:
+            cache.save()
+        except OSError as e:        # unwritable path: warm in-memory only
+            import sys
+            print(f"repro.tune: warmup cache not persisted "
+                  f"({cache.path}: {e})", file=sys.stderr)
+    return report
+
+
 def lookup_matmul(m, n, k, *, dtype_bytes=2, backend="xla",
                   cache: TuneCache | None = None) -> MatmulBlocking | None:
     cache = default_cache() if cache is None else cache

@@ -1,0 +1,164 @@
+"""CNN serving path: bucket selection, pad-to-bucket bit-exactness, warmup
+population of the blocking cache, and the continuous-batching scheduler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend as be
+from repro.graph import GxM, resnet50
+from repro.graph.serving import (CnnInferenceEngine, cnn_model_flops,
+                                 conv_shapes, distinct_conv_signatures,
+                                 make_buckets, pick_bucket)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve_cnn import ImageServer
+from repro.tune.cache import TuneCache, conv_key
+
+
+def _tiny(num_classes=10):
+    nl = resnet50(num_classes=num_classes, stages=(1, 1, 1, 1))
+    m = GxM(nl, num_classes=num_classes)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params
+
+
+def _engine(m, params, **kw):
+    kw.setdefault("image_hw", (32, 32))
+    kw.setdefault("mesh", make_host_mesh())
+    kw.setdefault("max_batch", 8)
+    return CnnInferenceEngine(m, params, **kw)
+
+
+# -- bucketing ---------------------------------------------------------------
+
+def test_make_buckets_ladder_and_shard_multiples():
+    assert make_buckets(16) == (1, 2, 4, 8, 16)
+    assert make_buckets(12) == (1, 2, 4, 8, 16)       # next power of two
+    assert make_buckets(16, num_shards=2) == (2, 4, 8, 16)
+    assert all(b % 4 == 0 for b in make_buckets(32, num_shards=4))
+
+
+def test_pick_bucket_is_minimal():
+    buckets = (2, 4, 8, 16)
+    assert pick_bucket(1, buckets) == 2
+    assert pick_bucket(2, buckets) == 2
+    assert pick_bucket(3, buckets) == 4
+    assert pick_bucket(5, buckets) == 8
+    assert pick_bucket(16, buckets) == 16
+    assert pick_bucket(99, buckets) == 16              # caller chunks
+
+
+# -- shape inference ---------------------------------------------------------
+
+def test_conv_shapes_cover_every_conv_task():
+    m, _ = _tiny()
+    shapes = conv_shapes(m.etg, (32, 32))
+    convs = [t for t in m.etg.tasks if t.op == "conv"]
+    assert len(shapes) == len(convs)
+    by_name = {s["name"]: s for s in shapes}
+    # the stem conv sees the raw image plane
+    assert by_name["conv1"]["h"] == 32 and by_name["conv1"]["c"] == 3
+    # every spatial extent must be positive and strides propagate
+    assert all(s["h"] > 0 and s["w"] > 0 for s in shapes)
+    assert cnn_model_flops(m.etg, (32, 32), 4) == \
+        2 * cnn_model_flops(m.etg, (32, 32), 2)
+
+
+# -- padded lanes are invisible ----------------------------------------------
+
+def test_padded_batch_bit_exact_vs_unbatched_forward(rng):
+    m, params = _tiny()
+    eng = _engine(m, params)
+    eng.warmup(autotune="off")
+    x = rng.standard_normal((3, 32, 32, 3)).astype(np.float32)
+    got = np.asarray(eng.infer(x))                    # pads 3 -> bucket 4
+    ref = np.asarray(m.forward(params, jnp.asarray(x), train=False))
+    np.testing.assert_array_equal(got, ref)
+    # lane independence: what fills the padded lane cannot leak into real
+    # lanes (inference has no cross-batch ops — BN is folded)
+    fn = eng.aot_executable(4)
+    junk = 100 * rng.standard_normal((1, 32, 32, 3)).astype(np.float32)
+    with_zeros = fn(params, jnp.asarray(np.concatenate([x, 0 * junk])))
+    with_junk = fn(params, jnp.asarray(np.concatenate([x, junk])))
+    np.testing.assert_array_equal(np.asarray(with_zeros)[:3],
+                                  np.asarray(with_junk)[:3])
+
+
+def test_infer_rejects_oversized_batch(rng):
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(2, 4))
+    x = rng.standard_normal((5, 32, 32, 3)).astype(np.float32)
+    with pytest.raises(ValueError):
+        eng.infer(x)
+
+
+# -- warmup ------------------------------------------------------------------
+
+def test_warmup_populates_tune_cache_for_every_signature(tmp_path):
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(2, 4))
+    cache = TuneCache(str(tmp_path / "cache.json"))
+    report = eng.warmup(autotune="tune", cache=cache, compile_buckets=False)
+    sigs = distinct_conv_signatures(eng.conv_shapes())
+    assert report["conv_signatures"] == len(sigs)
+    backend = be.resolve(m.impl)
+    for sh in sigs:
+        for bucket in eng.buckets:
+            key = conv_key(kind="fwd", dtype_bytes=4, backend=backend,
+                           minibatch=eng.local_batch(bucket), **sh)
+            assert cache.lookup(key) is not None, key
+    # one entry per signature × per-device bucket batch, all reported
+    assert report["tune_entries"] == len(sigs) * len(eng.buckets)
+    assert report["kernel_cache_entries"] == len(m.etg.kernel_cache)
+
+
+def test_compiled_buckets_consult_tuner_cache(monkeypatch):
+    """The request-path executables must be traced under the engine's
+    autotune scope, so the blockings warmup persisted are actually used
+    (not the analytic heuristic)."""
+    import repro.tune as tune
+    looked_up = []
+    real = tune.lookup_conv
+
+    def spy(**kw):
+        looked_up.append(kw["minibatch"])
+        return real(**kw)
+
+    monkeypatch.setattr(tune, "lookup_conv", spy)
+    m, params = _tiny()
+    m.impl = "interpret"        # xla path never consults conv_blocking
+    eng = _engine(m, params, buckets=(2,))
+    eng.warmup(autotune="off")  # compile-only; engine scope is "cache"
+    assert looked_up and set(looked_up) == {2}, looked_up
+
+
+def test_warmup_compiles_every_bucket(rng):
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(2, 4))
+    report = eng.warmup(autotune="off")
+    assert set(report["compile_s"]) == {2, 4}
+    for b in (2, 4):
+        assert eng.aot_executable(b) is eng._compiled[b]
+
+
+# -- continuous-batching scheduler -------------------------------------------
+
+def test_server_serves_all_requests_and_counts_padding(rng):
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(2, 4))
+    eng.warmup(autotune="off")
+    server = ImageServer(eng)
+    images = rng.standard_normal((7, 32, 32, 3)).astype(np.float32)
+    rids = [server.submit(img) for img in images]
+    results = server.run()
+    assert set(results) == set(rids)
+    # 7 requests -> one bucket-4 batch (4 reqs) + bucket-4 batch (3 reqs,
+    # 1 padded lane)
+    assert server.stats["images"] == 7
+    assert server.stats["padded_lanes"] == 1
+    # scheduler results match the direct forward
+    logits = np.asarray(m.forward(params, jnp.asarray(images), train=False))
+    for rid, img_logits in zip(rids, logits):
+        top1, val = results[rid]
+        assert top1 == int(np.argmax(img_logits))
+        assert val == float(img_logits[top1])
