@@ -2,6 +2,8 @@
 tables).  Prints ``name,us_per_call,derived`` CSV rows.
 
   Fig 4 / Table I  -> resnet50_layers       (fwd per-layer, im2col vs direct)
+  §II-B..E tiling  -> conv_fwd_bench        (tiled vs whole-plane fwd ->
+                                             BENCH_conv_fwd.json baseline)
   Fig 5 (a)(b)     -> bwd_wu_layers         (duality bwd + weight update)
   Fig 8            -> reduced_precision_bench (int8 weights, §II-K analog)
   Fig 9            -> scaling_bench         (strong scaling, overlap model)
@@ -22,12 +24,14 @@ import sys
 import tempfile
 import traceback
 
-from benchmarks import (autotune_bench, bwd_wu_layers, fusion_bench,
-                        inception_bench, lm_roofline_table, moe_streams_bench,
-                        reduced_precision_bench, resnet50_layers,
-                        scaling_bench, serve_cnn_bench, streams_bench)
+from benchmarks import (autotune_bench, bwd_wu_layers, conv_fwd_bench,
+                        fusion_bench, inception_bench, lm_roofline_table,
+                        moe_streams_bench, reduced_precision_bench,
+                        resnet50_layers, scaling_bench, serve_cnn_bench,
+                        streams_bench)
 
 MODULES = [
+    ("conv_fwd_bench", conv_fwd_bench),
     ("resnet50_layers", resnet50_layers),
     ("bwd_wu_layers", bwd_wu_layers),
     ("fusion_bench", fusion_bench),
@@ -61,12 +65,18 @@ def main(argv=None) -> None:
             failures += 1
             print("autotune_bench,0,FAILED", file=sys.stdout)
             traceback.print_exc()
-        try:
-            serve_cnn_bench.main(["--dry"])
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print("serve_cnn_bench,0,FAILED", file=sys.stdout)
-            traceback.print_exc()
+        # fast-path tables that still run in smoke mode (conv_fwd_bench is
+        # model-based, so the dry run also refreshes BENCH_conv_fwd.json)
+        for name, call in (("serve_cnn_bench",
+                            lambda: serve_cnn_bench.main(["--dry"])),
+                           ("conv_fwd_bench",
+                            lambda: conv_fwd_bench.main([]))):
+            try:
+                call()
+            except Exception:  # noqa: BLE001
+                failures += 1
+                print(f"{name},0,FAILED", file=sys.stdout)
+                traceback.print_exc()
     else:
         for name, mod in MODULES:
             try:

@@ -18,6 +18,11 @@ The *blocking* each specialization uses is governed by the autotune knob
   "tune"   on a miss, search the blocking space, persist the winner
 
 See ``repro.tune`` and DESIGN.md §6.
+
+The forward conv's *input strategy* has its own knob (``REPRO_CONV_TILING``
+/ ``set_conv_tiling``): "tiled" (default) streams row bands with a VMEM
+working set independent of the image size, "whole" is the legacy
+whole-plane kernel kept for A/B comparison.  See DESIGN.md §9.
 """
 from __future__ import annotations
 
@@ -26,14 +31,22 @@ from contextlib import contextmanager
 
 _VALID = ("pallas", "interpret", "xla")
 _VALID_AUTOTUNE = ("off", "cache", "tune")
+_VALID_CONV_TILING = ("tiled", "whole")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
 _autotune = os.environ.get("REPRO_AUTOTUNE", "off")
+_conv_tiling = os.environ.get("REPRO_CONV_TILING", "tiled")
 if _autotune not in _VALID_AUTOTUNE:
     import sys
     print(f"repro.backend: ignoring invalid REPRO_AUTOTUNE={_autotune!r} "
           f"(valid: {', '.join(_VALID_AUTOTUNE)}); autotuning is off",
           file=sys.stderr)
     _autotune = "off"
+if _conv_tiling not in _VALID_CONV_TILING:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_CONV_TILING="
+          f"{_conv_tiling!r} (valid: {', '.join(_VALID_CONV_TILING)}); "
+          f"using tiled", file=sys.stderr)
+    _conv_tiling = "tiled"
 
 
 def get_backend() -> str:
@@ -88,3 +101,27 @@ def resolve_autotune(mode: str | None) -> str:
     mode = mode or _autotune
     assert mode in _VALID_AUTOTUNE, mode
     return mode
+
+
+def get_conv_tiling() -> str:
+    """Forward direct-conv input strategy: "tiled" streams only the row band
+    each grid step needs (VMEM working set independent of H*W — the default);
+    "whole" is the legacy whole-plane kernel, kept for A/B benchmarking."""
+    return _conv_tiling
+
+
+def set_conv_tiling(mode: str) -> None:
+    global _conv_tiling
+    assert mode in _VALID_CONV_TILING, mode
+    _conv_tiling = mode
+
+
+@contextmanager
+def use_conv_tiling(mode: str):
+    global _conv_tiling
+    prev = _conv_tiling
+    set_conv_tiling(mode)
+    try:
+        yield
+    finally:
+        _conv_tiling = prev

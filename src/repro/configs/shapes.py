@@ -5,6 +5,9 @@ Each LM arch pairs with 4 shapes; ``train_*`` lowers train_step,
 serve_step (one token against a seq_len cache).  ``long_500k`` requires
 sub-quadratic sequence mixing — skipped (with a reason) for pure
 full-attention archs, run for ssm/hybrid (see DESIGN.md §5).
+
+Also home to the conv regression shapes (``STEM_CONV``/``STEM_CONV_HALF``)
+shared by the kernel tests and benchmarks (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -30,6 +33,17 @@ SHAPES = {
     "decode_32k": Shape("decode_32k", "decode", 32768, 128),
     "long_500k": Shape("long_500k", "decode", 524288, 1),
 }
+
+# Conv regression shapes (tests/test_kernels_conv.py + benchmarks): the
+# ResNet conv1 stem — a 224x224 input, 7x7 stride-2, 112x112 output — whose
+# padded input plane exceeds any forced-small VMEM budget on the legacy
+# whole-plane kernel and therefore only runs blocked.  C is lane-padded 3->8
+# (the real c=3 stem takes the im2col path, DESIGN.md §2); the half-res
+# variant pins that the tiled working set is independent of H*W.
+STEM_CONV = dict(name="resnet_conv1_stem", n=1, h=224, w=224, c=8, k=64,
+                 r=7, s=7, stride=2, padding=3)
+STEM_CONV_HALF = dict(name="resnet_conv1_stem_halfres", n=1, h=112, w=112,
+                      c=8, k=64, r=7, s=7, stride=2, padding=3)
 
 
 def applicable(cfg: ModelCfg, shape: Shape) -> tuple[bool, str]:

@@ -7,8 +7,9 @@ analogous constraints are:
   (a) the implicit-GEMM M-tile (rb_p * Q) should be >= 128 rows so the MXU
       runs full-height passes (the "FMA latency" of the systolic array is the
       pipeline fill, amortized by tall tiles);
-  (b) the per-grid-step working set (input plane slice + weight block +
-      output tile + accumulator) must fit the VMEM budget;
+  (b) the per-grid-step working set (streamed input row band — or resident
+      plane for the legacy whole-plane/wu kernels — + weight block + output
+      tile + accumulator) must fit the VMEM budget;
   (c) minor dims should be multiples of 128 lanes / 8 sublanes (K, C blocks).
 
 Two selection paths (DESIGN.md §3, §6):
@@ -27,8 +28,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
-VMEM_BUDGET = 16 * 1024 * 1024   # bytes/core we allow a kernel to claim
+# bytes/core we allow a kernel to claim; REPRO_VMEM_BUDGET forces a smaller
+# budget (CI exercises the tiled kernel under pressure with it)
+VMEM_BUDGET = int(os.environ.get("REPRO_VMEM_BUDGET", 16 * 1024 * 1024))
 LANE = 128
 SUBLANE = 8
 MXU = 128
@@ -38,9 +42,10 @@ MXU = 128
 class ConvBlocking:
     rb_p: int          # output rows per microkernel (paper RB_P)
     k_blk: int         # output-feature block (paper's K_b vector block)
-    c_blk: int         # input-feature block (streams variant only)
-    order: str         # dryrun loop order (paper §II-C)
+    c_blk: int         # input-feature block (C_b accumulation passes)
+    order: str         # grid/dryrun loop order (paper §II-C)
     vmem_bytes: int    # modeled working set
+    rb_q: int = 0      # output cols per microkernel (paper RB_Q; 0 = full Q)
 
 
 def divisors(x: int):
@@ -59,46 +64,91 @@ def aligned_block(dim: int) -> int:
 
 
 def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
-                     q: int, rb_p: int, padding: int,
-                     dtype_bytes: int = 4) -> int:
-    """Modeled per-grid-step VMEM bytes for a conv blocking candidate."""
-    hp, wp = h + 2 * padding + r, w + 2 * padding   # padded plane upper bound
-    plane = hp * wp * c * dtype_bytes
-    wblk = r * s * c * k_blk * dtype_bytes
-    out = rb_p * q * k_blk * dtype_bytes
-    acc = rb_p * q * k_blk * 4
-    return plane + wblk + out + acc
+                     q: int, rb_p: int, padding: int, dtype_bytes: int = 4,
+                     stride: int = 1, c_blk: int | None = None,
+                     rb_q: int | None = None,
+                     whole_plane: bool = False) -> int:
+    """Modeled per-grid-step VMEM bytes for a conv blocking candidate.
+
+    Tiled (default): the input contribution is one streamed row band —
+    ``((rb_p-1)*stride + r) x ((rb_q-1)*stride + s) x c_blk`` — so the
+    working set is independent of H*W.  ``whole_plane=True`` models the
+    legacy kernels (fwd whole-plane variant, wu, q8, streams) that keep the
+    full padded plane resident; there it scales with H*W*c_blk.
+    """
+    c_blk = c if not c_blk else c_blk
+    rb_q = q if not rb_q else rb_q
+    if whole_plane:
+        hp, wp = h + 2 * padding + r, w + 2 * padding   # padded upper bound
+        x_bytes = hp * wp * c_blk * dtype_bytes
+    else:
+        band_h = (rb_p - 1) * stride + r
+        band_w = (rb_q - 1) * stride + s
+        x_bytes = band_h * band_w * c_blk * dtype_bytes
+    wblk = r * s * c_blk * k_blk * dtype_bytes
+    out = rb_p * rb_q * k_blk * dtype_bytes
+    acc = rb_p * rb_q * k_blk * 4
+    return x_bytes + wblk + out + acc
 
 
 def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
                            stride: int, padding: int, dtype_bytes: int = 4,
                            vmem_budget: int = VMEM_BUDGET,
-                           require_divisor: bool = False) -> ConvBlocking:
-    """Closed-form heuristic (the seed behavior; no cache consulted)."""
+                           require_divisor: bool = False,
+                           whole_plane: bool | None = None) -> ConvBlocking:
+    """Closed-form heuristic (no cache consulted).
+
+    ``whole_plane`` (default: ``require_divisor``) selects the resident-
+    plane VMEM model: the wu kernel (which also needs rb_p | P) keeps the
+    *full-C* padded plane in VMEM, the streams kernel a C_blk slice of it.
+    The forward path is tiled: the working set is the streamed row band, so
+    the budget constrains the *band* — C stays unblocked (single
+    accumulation pass) and RB_Q the full row unless the band itself would
+    not fit, which is exactly the large-image regime the tiling exists for.
+    """
     p = (h + 2 * padding - r) // stride + 1
     q = (w + 2 * padding - s) // stride + 1
     k_blk = aligned_block(k)
-    c_blk = aligned_block(c)
+    whole = require_divisor if whole_plane is None else whole_plane
 
-    def ws(rb_p: int) -> int:
+    # c_blk is the reported blocking knob; c_model is what sits in VMEM
+    # (the wu kernel has no C blocking — its plane is resident at full C)
+    rb_q = q
+    if require_divisor:
+        c_blk, c_model = aligned_block(c), c
+    elif whole:
+        c_blk = c_model = aligned_block(c)
+    else:
+        c_blk = c_model = c
+
+    def ws(rb_p: int, c_m: int, rb_q: int) -> int:
         return conv_working_set(h=h, w=w, c=c, k_blk=k_blk, r=r, s=s, q=q,
                                 rb_p=rb_p, padding=padding,
-                                dtype_bytes=dtype_bytes)
+                                dtype_bytes=dtype_bytes, stride=stride,
+                                c_blk=c_m, rb_q=rb_q, whole_plane=whole)
+
+    if not whole:
+        # prefer a single accumulation pass (c_blk = c); fall back to the
+        # lane-aligned block when even a one-row band would blow the budget
+        if ws(1, c_model, rb_q) > vmem_budget:
+            c_blk = c_model = aligned_block(c)
+        while ws(1, c_model, rb_q) > vmem_budget and rb_q > 1:
+            rb_q = math.ceil(rb_q / 2)          # wide image: block the row
 
     cands = divisors(p) if require_divisor else list(range(1, p + 1))
     # smallest rb_p with a full-height MXU M-tile, then grow while VMEM allows
     best = cands[0]
     for rb in cands:
-        if ws(rb) > vmem_budget:
+        if ws(rb, c_model, rb_q) > vmem_budget:
             break
         best = rb
-        if rb * q >= MXU:
+        if rb * rb_q >= MXU:
             break
     # §II-C: for 1x1 convs pull the C loop in (order "npkc" keeps the output
     # tile resident across C-blocks -> more output register reuse).
     order = "npkc" if (r == 1 and s == 1) else "nkpc"
     return ConvBlocking(rb_p=best, k_blk=k_blk, c_blk=c_blk, order=order,
-                        vmem_bytes=ws(best))
+                        vmem_bytes=ws(best, c_model, rb_q), rb_q=rb_q)
 
 
 def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
@@ -118,8 +168,8 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
     depends on how much batch-reuse amortizes weight traffic.
     """
     mode = _resolve_autotune(autotune)
+    kind = kind or ("wu" if require_divisor else "fwd")
     if mode != "off" and vmem_budget == VMEM_BUDGET:
-        kind = kind or ("wu" if require_divisor else "fwd")
         blk = _tuned_conv(mode, h=h, w=w, c=c, k=k, r=r, s=s, stride=stride,
                           padding=padding, dtype_bytes=dtype_bytes, kind=kind,
                           backend=_resolve_backend(backend),
@@ -131,7 +181,8 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
                                   stride=stride, padding=padding,
                                   dtype_bytes=dtype_bytes,
                                   vmem_budget=vmem_budget,
-                                  require_divisor=require_divisor)
+                                  require_divisor=require_divisor,
+                                  whole_plane=(kind != "fwd"))
 
 
 @dataclasses.dataclass(frozen=True)

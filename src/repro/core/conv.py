@@ -58,6 +58,7 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
     return conv2d_direct(x, w, stride=stride, padding=padding, bias=bias,
                          scale=scale, shift=shift, residual=residual,
                          relu=relu, rb_p=blk.rb_p, k_blk=blk.k_blk,
+                         c_blk=blk.c_blk, rb_q=blk.rb_q, order=blk.order,
                          interpret=(impl == "interpret"))
 
 

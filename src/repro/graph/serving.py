@@ -29,6 +29,7 @@ import numpy as np
 
 from repro import backend as be
 from repro import tune
+from repro.core.blocking import VMEM_BUDGET, conv_blocking
 from repro.core.conv import lane_ok
 
 
@@ -192,6 +193,7 @@ class CnnInferenceEngine:
         """
         backend = be.resolve(self.gxm.impl)
         sigs = distinct_conv_signatures(self.conv_shapes())
+        minibatches = sorted({self.local_batch(b) for b in self.buckets})
         report = {
             "conv_signatures": len(sigs),
             "pallas_path_signatures":
@@ -200,13 +202,23 @@ class CnnInferenceEngine:
             "buckets": list(self.buckets),
             "tune_entries": 0,
             "compile_s": {},
+            "conv_tiling": be.get_conv_tiling(),
+            "vmem_budget": VMEM_BUDGET,
         }
         if autotune != "off":
-            minibatches = sorted({self.local_batch(b) for b in self.buckets})
             entries = tune.warmup_convs(sigs, minibatches=minibatches,
                                         mode=autotune, backend=backend,
                                         cache=cache)
             report["tune_entries"] = sum(1 for e in entries if e["cached"])
+        # modeled per-grid-step VMEM high-water mark across the pallas-path
+        # signatures (tiled: a row band — independent of image_hw, so large
+        # serving buckets cannot blow the budget the way whole planes did)
+        ws = [conv_blocking(**sg, dtype_bytes=4, backend=backend,
+                            autotune="cache" if autotune != "off" else "off",
+                            kind="fwd", minibatch=max(minibatches))
+              .vmem_bytes
+              for sg in sigs if lane_ok(sg["c"], sg["k"])]
+        report["max_conv_vmem_bytes"] = max(ws, default=0)
         if compile_buckets:
             for bucket in self.buckets:
                 t0 = time.perf_counter()

@@ -1,28 +1,46 @@
-"""Direct-convolution forward Pallas kernel (paper §II-B..D,G adapted to TPU).
+"""Direct-convolution forward Pallas kernel (paper §II-B..E,G adapted to TPU).
 
 TPU mapping of the paper's blocked direct convolution:
 
   * ``VLEN`` feature-map blocking  -> channels live in the lane dimension
     (NHWC / RSCK layouts, C and K innermost).
-  * register blocking ``RB_P x RB_Q`` -> an MXU M-tile of ``RB_P`` full output
-    rows (M = RB_P*Q), so each grid step is one "microkernel invocation"
-    computing an (RB_P*Q, K_blk) output tile.
-  * the (r, s, C_b) small-GEMM chain -> statically unrolled (r, s) loop of
-    ``jax.lax.dot_general`` calls over VMEM slices, f32 accumulation.
+  * register blocking ``RB_P x RB_Q`` -> an MXU M-tile of ``RB_P`` output rows
+    by ``RB_Q`` output columns (M = RB_P*RB_Q), so each grid step is one
+    "microkernel invocation" computing an (RB_P*RB_Q, K_blk) output tile.
+    RB_Q defaults to the full row Q; blocking it is worthwhile for wide
+    images whose row band would not fit VMEM.
+  * cache blocking (§II-B)          -> the input is *tiled*: each grid step
+    streams only the (RB_P-1)*stride + R row band (x (RB_Q-1)*stride + S
+    columns) x C_blk channels it actually reads, via unblocked BlockSpec
+    index_maps over a (N, K_b, P_b, Q_b, C_b) grid — the VMEM working set is
+    independent of H*W (see ``core.blocking.conv_working_set``).
+  * C_b accumulation (§II-A alg. 4) -> input channels are blocked; an f32
+    VMEM scratch accumulator is zero-initialized on the first C-block visit
+    of an output tile and the fused epilogue fires on the last visit — the
+    same FLAG_INIT/FLAG_EPILOGUE discipline ``core.streams`` encodes into
+    replay schedules, here derived statically from the grid position
+    (C_b is always the innermost grid axis, so visits are contiguous).
+  * the (r, s) small-GEMM chain     -> statically unrolled (r, s) loop of
+    ``jax.lax.dot`` calls over VMEM slices, f32 accumulation.
   * layer fusion (§II-G)            -> bias / BN-scale-shift / residual-add /
     ReLU epilogue fused into the same kernel, applied while the tile is in
     VMEM ("hot in cache").
-  * two-level prefetch (§II-E)      -> the Mosaic grid pipeliner double-buffers
-    the next step's blocks automatically; grid order (N, K_b, P_b) keeps the
-    weight block resident across the P sweep (weight-stationary reuse).
+  * loop order (§II-C)              -> the grid is laid out per ``order``
+    (a permutation of "nkpc", C innermost; Q rides with P), trading
+    weight-block vs input-band reuse exactly as in the paper.
+  * two-level prefetch (§II-E)      -> the Mosaic grid pipeliner
+    double-buffers the next step's blocks automatically.
 
-The spatial input plane is passed whole per image (it fits VMEM for every
-layer of the paper's Table I); strided row/column access inside the kernel
-uses strided ``pl.dslice``.  Inputs must be pre-padded (``pad_input``) so no
-in-kernel slice ever leaves the array — the bottom padding also covers the
-ceil-div grid tail, which is how the paper's "second kernel variant at the
-P/Q boundary" (§II-H) disappears on TPU: out-of-range output rows land in
-Pallas' masked out-of-bounds stores.
+Inputs must be pre-padded (``pad_input``) so no in-kernel slice ever leaves
+the array — the bottom/right padding also covers the ceil-div grid tail,
+which is how the paper's "second kernel variant at the P/Q boundary" (§II-H)
+disappears on TPU: out-of-range output rows land in Pallas' masked
+out-of-bounds stores.
+
+The pre-refactor variant that shipped the whole padded input plane per image
+into VMEM on every grid step is kept as ``whole_plane=True`` (knob:
+``REPRO_CONV_TILING=whole`` / ``repro.backend.set_conv_tiling``) for A/B
+benchmarking; it only works for layers whose plane fits the VMEM budget.
 """
 from __future__ import annotations
 
@@ -33,6 +51,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,19 +66,34 @@ class FuseSpec:
         return int(self.bias) + 2 * int(self.bn) + int(self.residual)
 
 
-def pad_input(x, *, padding: int, stride: int, rb_p: int, r: int, p: int):
-    """Spatially pad x (N,H,W,C) for the kernel: `padding` on all sides plus
-    bottom slack so the ceil-div row grid never reads out of bounds."""
+def pad_input(x, *, padding: int, stride: int, rb_p: int, r: int, p: int,
+              rb_q: int | None = None, s: int | None = None,
+              q: int | None = None):
+    """Spatially pad x (N,H,W,C) for the kernels: `padding` on all sides plus
+    bottom (and, with ``rb_q``, right) slack so the ceil-div grids never read
+    out of bounds.
+
+    The bottom slack is exactly ``rows_needed - (h + padding)``: the grid's
+    last row band ends at row ``(ceil(p/rb_p)*rb_p - 1)*stride + r`` of the
+    padded plane, which for ``stride > 1`` is usually *less* than the
+    symmetric ``h + 2*padding`` — padding past it would inflate the plane
+    (and every row band) beyond what any grid step can touch.
+    """
     n, h, w, c = x.shape
     p_b = math.ceil(p / rb_p)
-    rows_needed = ((p_b * rb_p - 1) * stride + r)        # last row touched + 1
-    pad_bottom = max(rows_needed - (h + 2 * padding), 0) + padding
-    return jnp.pad(x, ((0, 0), (padding, pad_bottom), (padding, padding), (0, 0)))
+    rows_needed = (p_b * rb_p - 1) * stride + r          # last row touched + 1
+    pad_bottom = max(rows_needed - (h + padding), 0)
+    if rb_q is None:        # legacy full-row callers (wu / q8 kernels)
+        pad_right = padding
+    else:
+        q_b = math.ceil(q / rb_q)
+        cols_needed = (q_b * rb_q - 1) * stride + s      # last col touched + 1
+        pad_right = max(cols_needed - (w + padding), 0)
+    return jnp.pad(x, ((0, 0), (padding, pad_bottom), (padding, pad_right),
+                       (0, 0)))
 
 
-def _kernel(x_ref, w_ref, *refs, fuse: FuseSpec, rb_p: int, q: int,
-            stride: int, r: int, s: int, accum_dtype, out_dtype):
-    """One microkernel invocation: an (rb_p*q, k_blk) output tile."""
+def _unpack_fuse_refs(refs, fuse: FuseSpec):
     idx = 0
     bias_ref = scale_ref = shift_ref = res_ref = None
     if fuse.bias:
@@ -68,60 +102,213 @@ def _kernel(x_ref, w_ref, *refs, fuse: FuseSpec, rb_p: int, q: int,
         scale_ref = refs[idx]; shift_ref = refs[idx + 1]; idx += 2
     if fuse.residual:
         res_ref = refs[idx]; idx += 1
-    o_ref = refs[idx]
+    return bias_ref, scale_ref, shift_ref, res_ref, refs[idx]
 
-    pb = pl.program_id(2)
-    c = x_ref.shape[-1]
-    k_blk = w_ref.shape[-1]
-    acc = jnp.zeros((rb_p * q, k_blk), dtype=accum_dtype)
-    row0 = pb * rb_p * stride
-    # The paper's perfectly-chained small-GEMM sequence over (r, s):
-    for rr in range(r):
-        for ss in range(s):
-            xs = x_ref[0, pl.dslice(row0 + rr, rb_p, stride),
-                       pl.dslice(ss, q, stride), :]          # (rb_p, q, c)
-            a = xs.reshape(rb_p * q, c)
-            wb = w_ref[rr, ss, :, :]                         # (c, k_blk)
-            acc += jax.lax.dot(a.astype(accum_dtype), wb.astype(accum_dtype),
-                               preferred_element_type=accum_dtype)
-    # Fused epilogue while the tile is hot in VMEM (§II-G).
+
+def _epilogue(acc, fuse: FuseSpec, bias_ref, scale_ref, shift_ref, res_ref,
+              m: int, k_blk: int, accum_dtype):
+    """The fused §II-G L() chain, applied while the tile is hot in VMEM."""
     if fuse.bn:
         acc = acc * scale_ref[0, :].astype(accum_dtype)
         acc = acc + shift_ref[0, :].astype(accum_dtype)
     if fuse.bias:
         acc = acc + bias_ref[0, :].astype(accum_dtype)
     if fuse.residual:
-        acc = acc + res_ref[0].reshape(rb_p * q, k_blk).astype(accum_dtype)
+        acc = acc + res_ref[0].reshape(m, k_blk).astype(accum_dtype)
     if fuse.relu:
         acc = jnp.maximum(acc, 0)
+    return acc
+
+
+def _kernel_tiled(x_ref, w_ref, *refs, fuse: FuseSpec, rb_p: int,
+                  rb_q: int, stride: int, r: int, s: int, c_axis: int,
+                  accum_dtype, out_dtype):
+    """One microkernel invocation on a streamed row band: accumulate one
+    C-block into the scratch tile; init on the first visit, epilogue + store
+    on the last (the streams FLAG_INIT/FLAG_EPILOGUE discipline, static)."""
+    refs, acc_ref = refs[:-1], refs[-1]
+    bias_ref, scale_ref, shift_ref, res_ref, o_ref = \
+        _unpack_fuse_refs(refs, fuse)
+
+    ci = pl.program_id(c_axis)
+    c_b = pl.num_programs(c_axis)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c_blk = x_ref.shape[-1]
+    k_blk = w_ref.shape[-1]
+    acc = jnp.zeros((rb_p * rb_q, k_blk), dtype=accum_dtype)
+    # The paper's perfectly-chained small-GEMM sequence over (r, s); the
+    # band's row 0 is this step's first window row, so offsets are local.
+    for rr in range(r):
+        for ss in range(s):
+            xs = x_ref[0, pl.dslice(rr, rb_p, stride),
+                       pl.dslice(ss, rb_q, stride), :]   # (rb_p, rb_q, c_blk)
+            a = xs.reshape(rb_p * rb_q, c_blk)
+            acc += jax.lax.dot(a.astype(accum_dtype), w_ref[rr, ss, :, :]
+                               .astype(accum_dtype),
+                               preferred_element_type=accum_dtype)
+    acc_ref[...] += acc
+
+    @pl.when(ci == c_b - 1)
+    def _finish():
+        out = _epilogue(acc_ref[...], fuse, bias_ref, scale_ref, shift_ref,
+                        res_ref, rb_p * rb_q, k_blk, accum_dtype)
+        o_ref[0] = out.reshape(rb_p, rb_q, k_blk).astype(out_dtype)
+
+
+def _kernel_whole(x_ref, w_ref, *refs, fuse: FuseSpec, rb_p: int, q: int,
+                  stride: int, r: int, s: int, p_axis: int, accum_dtype,
+                  out_dtype):
+    """Legacy microkernel: whole padded plane resident, row selection via the
+    P-block program id (kept for A/B benchmarking against the tiled path)."""
+    bias_ref, scale_ref, shift_ref, res_ref, o_ref = \
+        _unpack_fuse_refs(refs, fuse)
+
+    pb = pl.program_id(p_axis)
+    c = x_ref.shape[-1]
+    k_blk = w_ref.shape[-1]
+    acc = jnp.zeros((rb_p * q, k_blk), dtype=accum_dtype)
+    row0 = pb * rb_p * stride
+    for rr in range(r):
+        for ss in range(s):
+            xs = x_ref[0, pl.dslice(row0 + rr, rb_p, stride),
+                       pl.dslice(ss, q, stride), :]          # (rb_p, q, c)
+            a = xs.reshape(rb_p * q, c)
+            acc += jax.lax.dot(a.astype(accum_dtype),
+                               w_ref[rr, ss, :, :].astype(accum_dtype),
+                               preferred_element_type=accum_dtype)
+    acc = _epilogue(acc, fuse, bias_ref, scale_ref, shift_ref, res_ref,
+                    rb_p * q, k_blk, accum_dtype)
     o_ref[0] = acc.reshape(rb_p, q, k_blk).astype(out_dtype)
+
+
+def _grid_layout(order: str, *, n: int, k_b: int, p_b: int, q_b: int,
+                 c_b: int):
+    """Grid extents laid out per the §II-C loop order.  ``order`` permutes
+    (n, k, p, c) with C innermost (the accumulator tile lives across the
+    C sweep); the Q_b axis always rides directly inside P_b."""
+    assert sorted(order) == sorted("nkpc"), order
+    assert order.endswith("c"), "C-blocks must be innermost (accumulator)"
+    axis: dict[str, int] = {}
+    dims: list[int] = []
+    for ch in order:
+        if ch == "p":
+            axis["p"] = len(dims); dims.append(p_b)
+            axis["q"] = len(dims); dims.append(q_b)
+        else:
+            axis[ch] = len(dims)
+            dims.append({"n": n, "k": k_b, "c": c_b}[ch])
+    return tuple(dims), axis
 
 
 def conv2d_direct(x, w, *, stride: int = 1, padding: int = 0,
                   bias=None, scale=None, shift=None, residual=None,
                   relu: bool = False, rb_p: int = 8, k_blk: int | None = None,
+                  c_blk: int | None = None, rb_q: int | None = None,
+                  order: str = "nkpc", whole_plane: bool | None = None,
                   accum_dtype=jnp.float32, interpret: bool = False):
     """Direct conv fwd.  x: (N,H,W,C), w: (R,S,C,K) -> (N,P,Q,K).
 
-    `rb_p` is the paper's RB_P register block (output rows per microkernel);
-    RB_Q is always the full row Q (Q fits the M-tile together with rb_p for
-    every shape we target).  `k_blk` is the output-feature block (paper: the
-    vectorized K_b loop); defaults to min(K, 128) = one MXU N-tile.
+    `rb_p`/`rb_q` are the paper's RB_P/RB_Q register blocks (output rows /
+    columns per microkernel; `rb_q=None` = the full row).  `k_blk` is the
+    output-feature block (paper: the vectorized K_b loop); defaults to
+    min(K, 128) = one MXU N-tile.  `c_blk` blocks the input features
+    (paper C_b; `None` = unblocked): the output tile is then revisited
+    across C-block grid steps and accumulated in an f32 VMEM scratch.
+    `order` is the §II-C loop order of the grid.  `whole_plane` selects the
+    legacy untiled kernel (default: the ``repro.backend`` conv-tiling knob).
     """
     n, h, wdt, c = x.shape
     r, s, _, k = w.shape
     p = (h + 2 * padding - r) // stride + 1
     q = (wdt + 2 * padding - s) // stride + 1
     rb_p = min(rb_p, p)
+    rb_q = q if rb_q in (None, 0) else min(rb_q, q)
     if k_blk is None:
         k_blk = min(k, 128)
+    c_blk = c if c_blk in (None, 0) else c_blk
     assert k % k_blk == 0, (k, k_blk)
+    assert c % c_blk == 0, (c, c_blk)
+    if whole_plane is None:
+        from repro import backend as be
+        whole_plane = be.get_conv_tiling() == "whole"
 
     fuse = FuseSpec(bias=bias is not None, bn=scale is not None,
                     residual=residual is not None, relu=relu)
     if fuse.bn:
         assert shift is not None
 
+    p_b = math.ceil(p / rb_p)
+    q_b = math.ceil(q / rb_q)
+    k_b = k // k_blk
+    c_b = c // c_blk
+    out_dtype = x.dtype
+
+    if whole_plane:
+        # the legacy kernel has no C/Q blocking or order freedom — when the
+        # "whole" knob overrides a tiled blocking, those axes collapse
+        return _conv2d_whole_plane(
+            x, w, fuse=fuse, stride=stride, padding=padding, bias=bias,
+            scale=scale, shift=shift, residual=residual, rb_p=rb_p,
+            k_blk=k_blk, p=p, q=q, r=r, s=s, n=n, k=k, c=c,
+            accum_dtype=accum_dtype, out_dtype=out_dtype,
+            interpret=interpret)
+
+    xp = pad_input(x, padding=padding, stride=stride, rb_p=rb_p, r=r, p=p,
+                   rb_q=rb_q, s=s, q=q)
+    band_h = (rb_p - 1) * stride + r
+    band_w = (rb_q - 1) * stride + s
+    grid, axis = _grid_layout(order, n=n, k_b=k_b, p_b=p_b, q_b=q_b, c_b=c_b)
+    an, ak, ap, aq, ac = (axis[d] for d in "nkpqc")
+
+    # Row-band streaming: unblocked indexing (element offsets), because
+    # consecutive bands overlap by the (r - stride)-row halo and so are not
+    # aligned to any fixed block size.  pad_input guarantees the last band
+    # stays in bounds.
+    in_specs = [
+        pl.BlockSpec((1, band_h, band_w, c_blk),
+                     lambda *i: (i[an], i[ap] * rb_p * stride,
+                                 i[aq] * rb_q * stride, i[ac] * c_blk),
+                     indexing_mode=pl.unblocked),
+        pl.BlockSpec((r, s, c_blk, k_blk),
+                     lambda *i: (0, 0, i[ac], i[ak])),
+    ]
+    args = [xp, w]
+    if fuse.bias:
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda *i: (0, i[ak])))
+        args.append(bias.reshape(1, k))
+    if fuse.bn:
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda *i: (0, i[ak])))
+        in_specs.append(pl.BlockSpec((1, k_blk), lambda *i: (0, i[ak])))
+        args.extend([scale.reshape(1, k), shift.reshape(1, k)])
+    if fuse.residual:
+        in_specs.append(pl.BlockSpec((1, rb_p, rb_q, k_blk),
+                                     lambda *i: (i[an], i[ap], i[aq], i[ak])))
+        args.append(residual)
+
+    kern = functools.partial(_kernel_tiled, fuse=fuse, rb_p=rb_p, rb_q=rb_q,
+                             stride=stride, r=r, s=s, c_axis=ac,
+                             accum_dtype=accum_dtype, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, rb_p, rb_q, k_blk),
+                               lambda *i: (i[an], i[ap], i[aq], i[ak])),
+        out_shape=jax.ShapeDtypeStruct((n, p, q, k), out_dtype),
+        scratch_shapes=[pltpu.VMEM((rb_p * rb_q, k_blk), accum_dtype)],
+        interpret=interpret,
+    )(*args)
+
+
+def _conv2d_whole_plane(x, w, *, fuse, stride, padding, bias, scale, shift,
+                        residual, rb_p, k_blk, p, q, r, s, n, k, c,
+                        accum_dtype, out_dtype, interpret):
+    """The pre-refactor kernel: whole padded plane per image in VMEM, C and Q
+    unblocked, grid (N, K_b, P_b).  Working set scales with H*W*C."""
     xp = pad_input(x, padding=padding, stride=stride, rb_p=rb_p, r=r, p=p)
     hp, wp = xp.shape[1], xp.shape[2]
     p_b = math.ceil(p / rb_p)
@@ -145,9 +332,8 @@ def conv2d_direct(x, w, *, stride: int = 1, padding: int = 0,
                                      lambda ni, ki, pi: (ni, pi, 0, ki)))
         args.append(residual)
 
-    out_dtype = x.dtype
-    kern = functools.partial(_kernel, fuse=fuse, rb_p=rb_p, q=q,
-                             stride=stride, r=r, s=s,
+    kern = functools.partial(_kernel_whole, fuse=fuse, rb_p=rb_p, q=q,
+                             stride=stride, r=r, s=s, p_axis=2,
                              accum_dtype=accum_dtype, out_dtype=out_dtype)
     return pl.pallas_call(
         kern,

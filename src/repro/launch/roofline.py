@@ -22,6 +22,8 @@ import re
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
+STEP_OVERHEAD_S = 5e-7       # grid-step pipeline-fill overhead (one source
+                             # of truth; repro.tune.measure re-exports in us)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -124,6 +126,35 @@ class Roofline:
         return chips_flops / (PEAK_FLOPS * self._chips)
 
     _chips: int = 256
+
+
+def kernel_roofline(*, flops: float, hbm_bytes: float, util: float = 1.0,
+                    n_steps: int = 0,
+                    step_overhead_s: float = STEP_OVERHEAD_S) -> dict:
+    """Roofline terms for one *blocked kernel launch* (the per-layer analog
+    of ``analyze``'s whole-module extraction).
+
+    ``hbm_bytes`` is the schedule-resolved traffic from ``repro.tune``'s
+    block-refetch model — including the multi-pass output term a C_b-blocked
+    kernel pays when an output tile is revisited across accumulation passes
+    (each extra visit is modeled as a read-back + rewrite, the conservative
+    "bytes accessed" convention used for the HLO extraction above).
+    ``efficiency`` is ideal-compute-time / modeled-cost: the Fig. 4 right
+    axis ("% of peak") for one layer.
+    """
+    t_comp = flops / (PEAK_FLOPS * max(util, 1e-3))
+    t_mem = hbm_bytes / HBM_BW
+    step_time = max(t_comp, t_mem)
+    cost = step_time + n_steps * step_overhead_s
+    ideal = flops / PEAK_FLOPS
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "step_time_s": step_time,
+        "cost_s": cost,
+        "dominant": "compute" if t_comp >= t_mem else "memory",
+        "efficiency": ideal / cost if cost > 0 else 0.0,
+    }
 
 
 def cost_analysis_dict(compiled) -> dict:

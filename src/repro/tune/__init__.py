@@ -23,16 +23,16 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.blocking import ConvBlocking, MatmulBlocking
+from repro.core.blocking import VMEM_BUDGET, ConvBlocking, MatmulBlocking
 from repro.tune.cache import (CACHE_VERSION, TuneCache,  # noqa: F401
                               conv_key, default_cache, device_kind,
                               matmul_key)
 from repro.tune.measure import (can_measure, conv_cost_us,  # noqa: F401
                                 matmul_cost_us, rank_conv)
-from repro.tune.space import (conv_candidates, grid_shape,  # noqa: F401
+from repro.tune.space import (conv_candidates,  # noqa: F401
                               matmul_candidates, out_dim)
 
-_CONV_FIELDS = ("rb_p", "k_blk", "c_blk", "order", "vmem_bytes")
+_CONV_FIELDS = ("rb_p", "k_blk", "c_blk", "order", "vmem_bytes", "rb_q")
 
 
 def _to_conv(entry: dict, *, c: int, k: int) -> ConvBlocking | None:
@@ -40,6 +40,12 @@ def _to_conv(entry: dict, *, c: int, k: int) -> ConvBlocking | None:
     if not all(f in blk for f in _CONV_FIELDS):
         return None
     if k % blk["k_blk"] or c % blk["c_blk"]:    # key drift safety net
+        return None
+    if blk["rb_q"] < 0:
+        return None
+    if blk["vmem_bytes"] > VMEM_BUDGET:
+        # the cache key has no budget coordinate: an entry tuned under the
+        # default 16 MiB must not serve a REPRO_VMEM_BUDGET-forced process
         return None
     return ConvBlocking(**{f: blk[f] for f in _CONV_FIELDS})
 

@@ -22,7 +22,7 @@ import tempfile
 import threading
 import time
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2     # v2: ConvBlocking grew rb_q (RB_Q column blocking)
 _ENV_VAR = "REPRO_TUNE_CACHE"
 
 

@@ -15,7 +15,14 @@ model instead:
   t_memory   HBM traffic from loop-order-aware block refetch counts: a block
              whose index depends on loop set S is fetched once per iteration
              of the loops at positions up to S's innermost member (§II-C cache
-             blocking, computed exactly instead of assumed).
+             blocking, computed exactly instead of assumed).  The tiled
+             forward kernel's input block is the streamed *row band* (its
+             index varies with P, so it refetches per row-block); the legacy
+             whole-plane variant ships the full padded plane on every grid
+             step (the "bytes accessed" upper-bound convention of
+             ``launch.roofline``).  A C_b-blocked output tile pays the
+             multi-pass term: each extra accumulation visit is modeled as a
+             read-back + rewrite.
   n_steps    grid size: each step pays a fixed pipeline-fill overhead.
 
 The model is deliberately the same family as ``benchmarks.resnet50_layers.
@@ -27,10 +34,11 @@ from __future__ import annotations
 import math
 
 from repro.core.blocking import LANE, ConvBlocking, MatmulBlocking
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
-from repro.tune.space import grid_shape, out_dim
+from repro.launch.roofline import (HBM_BW, PEAK_FLOPS, STEP_OVERHEAD_S,
+                                   kernel_roofline)
+from repro.tune.space import out_dim
 
-STEP_OVERHEAD_US = 0.5
+STEP_OVERHEAD_US = STEP_OVERHEAD_S * 1e6
 
 
 def _tile_util(extent: int) -> float:
@@ -53,9 +61,21 @@ def _refetches(dep_positions: list[int], extents: tuple[int, ...]) -> int:
     return n
 
 
-def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
-                 kind: str = "fwd") -> float:
-    """Modeled microseconds for one conv of `shape` under blocking `blk`."""
+def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
+                 kind: str = "fwd", whole_plane: bool = False) -> dict:
+    """Schedule-resolved FLOPs / HBM traffic / occupancy for one conv layer
+    under blocking `blk` — the inputs of ``launch.roofline.kernel_roofline``.
+
+    Traffic terms (all in bytes, summed over the whole launch):
+      * input  — the tiled fwd kernel streams one row band per step (deps:
+        N, P, C_b); ``whole_plane`` ships the padded plane on *every* grid
+        step; wu/streams keep the plane resident per (N, C_b).
+      * weight — one (r, s, C_blk, K_blk) block, resident across the P sweep
+        when the loop order allows (§II-C).
+      * output — one f32 tile per (N, K_b, P_b) visit; when C is blocked
+        (tiled fwd with c_blk < C, or streams) every extra accumulation pass
+        re-reads and rewrites the tile: the multi-pass output term.
+    """
     h, w, c, k = shape["h"], shape["w"], shape["c"], shape["k"]
     r, s = shape["r"], shape["s"]
     stride, padding = shape["stride"], shape["padding"]
@@ -64,38 +84,81 @@ def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     q = out_dim(w, s, stride, padding)
     n = minibatch
 
-    c_blk = blk.c_blk if kind == "streams" else c
-    extents = grid_shape(n=n, p=p, c=c, k=k, blk=blk, kind=kind)
-    order = blk.order if kind == "streams" else "nkpc"
+    tiled_fwd = kind == "fwd" and not whole_plane
+    if kind == "wu" or whole_plane:
+        c_blk, rb_q = c, q
+    elif kind == "streams":
+        c_blk, rb_q = blk.c_blk, q
+    else:
+        c_blk, rb_q = blk.c_blk, (blk.rb_q or q)
+    rb_p = min(blk.rb_p, p)
+    rb_q = min(rb_q, q)
+    p_b = math.ceil(p / rb_p)
+    q_b = math.ceil(q / rb_q) if tiled_fwd else 1
+    k_b = max(k // blk.k_blk, 1)
+    c_b = max(c // c_blk, 1)
+    extents = (n, k_b, p_b * q_b, c_b)
+
+    # the wu kernel and the legacy whole-plane fwd have a fixed grid order
+    order = "nkpc" if (kind == "wu" or whole_plane) else blk.order
     pos = {dim: i for i, dim in enumerate(order)}
-    # loop extents arranged in schedule order
     by_dim = {"n": extents[0], "k": extents[1], "p": extents[2],
               "c": extents[3]}
     ordered = tuple(by_dim[d] for d in order)
+    n_steps = extents[0] * extents[1] * extents[2] * extents[3]
 
     # compute: every grid step runs the full (r,s) small-GEMM chain
     flops = 2.0 * n * p * q * c * k * r * s
-    util = (_tile_util(blk.rb_p * q) * _tile_util(blk.k_blk)
+    util = (_tile_util(rb_p * rb_q) * _tile_util(blk.k_blk)
             * _tile_util(c_blk))
-    t_comp = flops / (PEAK_FLOPS * max(util, 1e-3))
 
-    # memory: block bytes x loop-order-exact refetch counts
     hp, wp = h + 2 * padding + r, w + 2 * padding
-    x_bytes = hp * wp * c_blk * dtype_bytes
+    if tiled_fwd:
+        band_h = (rb_p - 1) * stride + r
+        band_w = (rb_q - 1) * stride + s
+        x_bytes = band_h * band_w * c_blk * dtype_bytes
+        x_f = _refetches([pos["n"], pos["p"], pos["c"]], ordered)
+    else:
+        x_bytes = hp * wp * c_blk * dtype_bytes
+        if whole_plane:
+            # the legacy fwd kernel ships the entire padded plane into VMEM
+            # on every grid step — charge it per step (upper bound; VMEM
+            # residency across the sweep cannot be assumed once the plane
+            # approaches the budget, which is the regime tiling targets)
+            x_f = n_steps
+        else:
+            x_f = _refetches([pos["n"], pos["c"]], ordered)
     w_bytes = r * s * c_blk * blk.k_blk * dtype_bytes
-    o_bytes = blk.rb_p * q * blk.k_blk * 4          # f32 accumulator tile
-    x_f = _refetches([pos["n"], pos["c"]], ordered)
+    o_bytes = rb_p * rb_q * blk.k_blk * 4           # f32 accumulator tile
     w_f = _refetches([pos["k"], pos["c"]], ordered)
     o_f = _refetches([pos["n"], pos["k"], pos["p"]], ordered)
     revisit = max(extents[3], 1)
-    # a revisited output tile is read back and rewritten on each extra visit
-    o_traffic = o_bytes * o_f * (2 * revisit - 1 if kind == "streams" else 1)
-    t_mem = (x_bytes * x_f + w_bytes * w_f + o_traffic) / HBM_BW
+    # multi-pass output traffic: every extra C-block visit of an output tile
+    # is a read-back + rewrite (streams accumulates through the out block;
+    # the tiled fwd scratch tile is modeled the same way — conservative)
+    multipass = (2 * revisit - 1) if (kind == "streams" or tiled_fwd) else 1
+    o_traffic = o_bytes * o_f * multipass
+    total = x_bytes * x_f + w_bytes * w_f + o_traffic
+    return {
+        "flops": flops,
+        "util": util,
+        "x_bytes": x_bytes * x_f,
+        "w_bytes": w_bytes * w_f,
+        "o_bytes": o_traffic,
+        "hbm_bytes": total,
+        "n_steps": n_steps,
+        "extents": extents,
+    }
 
-    n_steps = 1
-    for e in extents:
-        n_steps *= e
-    return (max(t_comp, t_mem)) * 1e6 + n_steps * STEP_OVERHEAD_US
+
+def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
+                 kind: str = "fwd", whole_plane: bool = False) -> float:
+    """Modeled microseconds for one conv of `shape` under blocking `blk`."""
+    t = conv_traffic(shape, blk, minibatch=minibatch, kind=kind,
+                     whole_plane=whole_plane)
+    roof = kernel_roofline(flops=t["flops"], hbm_bytes=t["hbm_bytes"],
+                           util=t["util"], n_steps=0)
+    return roof["step_time_s"] * 1e6 + t["n_steps"] * STEP_OVERHEAD_US
 
 
 def matmul_cost_us(m: int, n: int, k: int, blk: MatmulBlocking, *,
@@ -162,7 +225,8 @@ def measure_conv_us(shape: dict, blk: ConvBlocking, *, kind: str = "fwd",
     else:
         fn = jax.jit(lambda x, wt: conv2d_direct(
             x, wt, stride=stride, padding=padding, rb_p=blk.rb_p,
-            k_blk=blk.k_blk))
+            k_blk=blk.k_blk, c_blk=blk.c_blk, rb_q=blk.rb_q,
+            order=blk.order, whole_plane=False))
 
     for _ in range(warmup):
         jax.block_until_ready(fn(x, wt))

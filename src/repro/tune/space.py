@@ -3,23 +3,23 @@
 For a conv layer the tunable coordinates are exactly the knobs the Pallas
 kernels expose:
 
-  rb_p   output rows per microkernel (paper RB_P; MXU M-tile = rb_p*Q)
+  rb_p   output rows per microkernel (paper RB_P; MXU M-tile = rb_p*rb_q)
+  rb_q   output cols per microkernel (paper RB_Q; fwd only, 0/q = full row)
   k_blk  output-feature block (paper K_b; MXU N-tile, must divide K)
-  c_blk  input-feature block (streams kernel only; must divide C)
-  order  dryrun loop order over (N, K_b, P_b, C_b) (paper §II-C)
+  c_blk  input-feature block (paper C_b accumulation; must divide C)
+  order  grid/dryrun loop order over (N, K_b, P_b, C_b) (paper §II-C)
 
 ``conv_candidates`` enumerates the feasible cross product — VMEM-budget
 filtered, lane-aligned, divisibility-respecting — with the analytic heuristic
 first, so it is both the cost-model prior and the seed the search can never
 do worse than.  Kinds:
 
-  "fwd"     conv2d_direct forward: C unblocked, grid order fixed (N,K_b,P_b)
-  "wu"      conv2d_wu update pass: rb_p must divide P
-  "streams" conv2d_streams: all four coordinates free
+  "fwd"     conv2d_direct tiled forward: all five coordinates free (C-block
+            accumulation + RB_Q column blocking + grid loop order)
+  "wu"      conv2d_wu update pass: rb_p must divide P; whole-plane
+  "streams" conv2d_streams: rb_p/k_blk/c_blk/order free; whole-plane
 """
 from __future__ import annotations
-
-import math
 
 from repro.core.blocking import (LANE, SUBLANE, VMEM_BUDGET, ConvBlocking,
                                  MatmulBlocking, conv_blocking_analytic,
@@ -58,6 +58,12 @@ def _rb_candidates(p: int, *, require_divisor: bool) -> list[int]:
     return cands
 
 
+def _rb_q_candidates(q: int) -> list[int]:
+    """RB_Q column blocks: the full row plus a few power-of-two column
+    blocks for wide images (the ceil-div Q grid masks the tail)."""
+    return sorted({q} | {b for b in (8, 16, 32, 64, 128) if b < q})
+
+
 def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
                     stride: int, padding: int, dtype_bytes: int = 4,
                     kind: str = "fwd",
@@ -66,35 +72,58 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
     assert kind in ("fwd", "wu", "streams"), kind
     p = out_dim(h, r, stride, padding)
     q = out_dim(w, s, stride, padding)
+    whole = kind != "fwd"           # wu/streams keep the plane resident
     seed = conv_blocking_analytic(
         h=h, w=w, c=c, k=k, r=r, s=s, stride=stride, padding=padding,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        require_divisor=(kind == "wu"))
+        require_divisor=(kind == "wu"), whole_plane=whole)
 
     k_blocks = _feature_blocks(k)
-    c_blocks = _feature_blocks(c) if kind == "streams" else [c]
-    orders = ORDERS if kind == "streams" else (seed.order,)
+    if kind == "wu":
+        c_blocks = [c]
+        orders = (seed.order,)
+        rb_qs = [q]
+    elif kind == "streams":
+        c_blocks = _feature_blocks(c)
+        orders = ORDERS
+        rb_qs = [q]
+    else:
+        # fwd: full-C single-pass first, then lane-aligned C_b accumulation
+        c_blocks = sorted({c} | set(_feature_blocks(c)), reverse=True)
+        orders = ORDERS
+        rb_qs = _rb_q_candidates(max(q, 1))
     rbs = _rb_candidates(max(p, 1), require_divisor=(kind == "wu"))
 
-    out: list[ConvBlocking] = [seed]
-    seen = {(seed.rb_p, seed.k_blk, seed.c_blk, seed.order)}
+    pool: list[ConvBlocking] = []
+    seen = {(seed.rb_p, seed.k_blk, seed.c_blk, seed.order,
+             seed.rb_q or q)}
     for rb in rbs:
         for kb in k_blocks:
             for cb in c_blocks:
-                ws = conv_working_set(
-                    h=h, w=w, c=cb if kind == "streams" else c, k_blk=kb,
-                    r=r, s=s, q=q, rb_p=rb, padding=padding,
-                    dtype_bytes=dtype_bytes)
-                if ws > vmem_budget:
-                    continue
-                for order in orders:
-                    key = (rb, kb, cb, order)
-                    if key in seen:
+                for rq in rb_qs:
+                    ws = conv_working_set(
+                        h=h, w=w, c=c, k_blk=kb, r=r, s=s, q=q, rb_p=rb,
+                        padding=padding, dtype_bytes=dtype_bytes,
+                        stride=stride, c_blk=cb, rb_q=rq,
+                        whole_plane=whole)
+                    if ws > vmem_budget:
                         continue
-                    seen.add(key)
-                    out.append(ConvBlocking(rb_p=rb, k_blk=kb, c_blk=cb,
-                                            order=order, vmem_bytes=ws))
-    return out[:MAX_CANDIDATES]
+                    for order in orders:
+                        key = (rb, kb, cb, order, rq)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        pool.append(ConvBlocking(rb_p=rb, k_blk=kb, c_blk=cb,
+                                                 order=order, vmem_bytes=ws,
+                                                 rb_q=rq))
+    if len(pool) > MAX_CANDIDATES - 1:
+        # spread-sample the (rb_p-major) pool instead of truncating its
+        # prefix: a prefix cut would exhaust the budget inside the first
+        # rb_p value's c_blk x rb_q x order cross product and never explore
+        # the register-block axis at all
+        step = len(pool) / (MAX_CANDIDATES - 1)
+        pool = [pool[int(i * step)] for i in range(MAX_CANDIDATES - 1)]
+    return [seed] + pool
 
 
 def matmul_candidates(m: int, n: int, k: int, *, dtype_bytes: int = 2,
@@ -132,8 +161,3 @@ def matmul_candidates(m: int, n: int, k: int, *, dtype_bytes: int = 2,
     return out[:MAX_CANDIDATES] or [seed]
 
 
-def grid_shape(*, n: int, p: int, c: int, k: int,
-               blk: ConvBlocking, kind: str) -> tuple[int, ...]:
-    """Loop extents (N, K_b, P_b, C_b) a blocking induces."""
-    c_b = c // blk.c_blk if kind == "streams" else 1
-    return (n, max(k // blk.k_blk, 1), math.ceil(p / blk.rb_p), max(c_b, 1))

@@ -1,9 +1,17 @@
 import os
+import sys
 
 # Tests run single-device ("xla"/"interpret" paths).  The 512-device flag is
 # set ONLY inside launch/dryrun.py and the subprocess-based distributed
 # tests — never globally here.
 os.environ.setdefault("REPRO_BACKEND", "xla")
+
+# `benchmarks/` is a repo-root module tree, not an installed package: make
+# its import work under bare `pytest` too (python -m pytest prepends the
+# CWD, plain pytest does not).
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 # Isolate the autotuner cache: tests must never read or pollute the user's
 # persistent ~/.cache tuner state (individual tests monkeypatch as needed).

@@ -3,7 +3,8 @@ respected, MXU-aligned blocks, divisor mode, loop-order rule."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.blocking import (VMEM_BUDGET, conv_blocking, divisors,
+from repro.core.blocking import (VMEM_BUDGET, conv_blocking,
+                                 conv_blocking_analytic, divisors,
                                  matmul_blocking)
 from repro.core.wu_strategy import choose_wu_strategy, hybrid_copies
 from repro.graph.topology import RESNET50_LAYERS
@@ -49,6 +50,21 @@ def test_divisor_mode(h, r):
                         padding=r // 2, require_divisor=True)
     p = h + 2 * (r // 2) - r + 1
     assert p % blk.rb_p == 0
+
+
+def test_analytic_vmem_model_matches_kernel_residency():
+    """The VMEM model must charge what each kernel actually keeps resident:
+    a row band for the tiled fwd, a C_blk plane slice for streams, the
+    full-C plane for wu — not the (much smaller) band for all three."""
+    big = dict(h=512, w=512, c=64, k=64, r=3, s=3, stride=1, padding=1)
+    hp, wp = 512 + 2 + 3, 512 + 2
+    plane = hp * wp * 64 * 4
+    tiled = conv_blocking_analytic(**big)
+    streams = conv_blocking_analytic(**big, whole_plane=True)
+    wu = conv_blocking_analytic(**big, require_divisor=True)
+    assert tiled.vmem_bytes < plane                   # band, not plane
+    assert streams.vmem_bytes >= hp * wp * streams.c_blk * 4
+    assert wu.vmem_bytes >= plane                     # full-C plane resident
 
 
 def test_matmul_blocking_budget():

@@ -1,0 +1,29 @@
+"""BENCH_conv_fwd invariants: the tiled input strategy must dominate the
+legacy whole-plane kernel — per layer, across both benchmark tables — on
+modeled HBM traffic, roofline cost, and VMEM working set (the PR-over-PR
+perf baseline other sessions diff against)."""
+from benchmarks.conv_fwd_bench import build_report, layer_tables
+
+
+def test_tables_cover_paper_topologies():
+    tables = layer_tables()
+    assert len(tables["resnet50"]) == 20          # paper Table I
+    assert len(tables["inception_v3"]) >= 10
+    for layers in tables.values():
+        for sh in layers:
+            for f in ("h", "w", "c", "k", "r", "s", "stride", "padding"):
+                assert f in sh, (sh, f)
+
+
+def test_tiled_dominates_whole_plane_everywhere():
+    report = build_report()
+    assert report["tables"]
+    for tname, recs in report["tables"].items():
+        for rec in recs:
+            t, wp = rec["tiled"], rec["whole_plane"]
+            lid = (tname, rec["layer"])
+            assert t["hbm_bytes"] <= wp["hbm_bytes"], lid
+            assert t["cost_us"] <= wp["cost_us"], lid
+            assert t["vmem_working_set"] <= wp["vmem_working_set"], lid
+            assert t["fits_vmem"], lid
+            assert t["images_per_sec"] >= wp["images_per_sec"], lid

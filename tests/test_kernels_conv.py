@@ -1,13 +1,20 @@
 """Per-kernel allclose vs the pure-jnp oracle (interpret mode), swept over
-shapes / strides / dtypes, plus hypothesis property sweeps."""
+shapes / strides / dtypes, plus hypothesis property sweeps.
+
+The forward kernel runs *tiled* by default (row-band streaming, C_b
+accumulation, RB_Q column blocks — DESIGN.md §9); the legacy whole-plane
+variant is pinned explicitly so both input strategies stay bit-exact."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.configs.shapes import STEM_CONV, STEM_CONV_HALF
+from repro.core.blocking import conv_blocking_analytic, conv_working_set
+from repro.tune.space import out_dim
 from repro.kernels import ref
-from repro.kernels.conv2d_direct import conv2d_direct
+from repro.kernels.conv2d_direct import conv2d_direct, pad_input
 from repro.kernels.conv2d_streams import conv2d_streams_auto
 from repro.kernels.conv2d_wu import conv2d_wu
 
@@ -111,3 +118,119 @@ def test_conv2d_direct_property(n, hw, c, k, r, stride, rb_p, seed):
     exp = ref.conv2d(x, wt, stride=stride, padding=pad)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-3, atol=1e-3)
+
+
+# -- tiled-input path (row-band streaming, C_b accumulation, RB_Q) -----------
+
+TILED_CASES = [
+    # n, h, w, c, k, r, stride, pad, rb_p, rb_q, c_blk, order
+    (2, 8, 8, 16, 16, 3, 1, 1, 4, None, 8, "nkpc"),   # C_b accumulation
+    (1, 9, 9, 8, 16, 3, 1, 1, 4, 4, 8, "npkc"),       # P and Q ceil-div tails
+    (2, 16, 16, 8, 8, 3, 2, 1, 4, 3, 8, "knpc"),      # stride 2 + Q tail
+    (1, 14, 14, 16, 32, 1, 1, 0, 7, 5, 8, "pknc"),    # 1x1, every axis free
+    (1, 12, 12, 8, 8, 5, 1, 2, 3, 6, 8, "nkpc"),      # 5x5 halo
+    (1, 24, 24, 8, 16, 7, 2, 3, 4, 6, 8, "npkc"),     # 7x7 stride-2 halo
+]
+
+
+@pytest.mark.parametrize("case", TILED_CASES)
+def test_conv2d_tiled_blocking_sweep(rng, case):
+    """Every freed axis — c_blk, rb_q, loop order — stays bit-exact vs the
+    oracle, including the ceil-div spatial tails."""
+    n, h, w, c, k, r, stride, pad, rb_p, rb_q, c_blk, order = case
+    x, wt = _data(rng, n, h, w, c, k, r)
+    out = conv2d_direct(x, wt, stride=stride, padding=pad, rb_p=rb_p,
+                        rb_q=rb_q, c_blk=c_blk, order=order, interpret=True)
+    exp = ref.conv2d(x, wt, stride=stride, padding=pad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_tail_with_fused_residual(rng):
+    """Ceil-div P tail + full fused epilogue: the residual BlockSpec reads a
+    (1, rb_p, rb_q, k_blk) block at the tail, so p % rb_p != 0 with
+    relu+residual must stay bit-exact (pallas masks the out-of-range rows)."""
+    n, h, c, k, r, pad = 1, 9, 8, 16, 3, 1
+    rb_p = 4                                    # p = 9 -> tail block of 1
+    x, wt = _data(rng, n, h, h, c, k, r)
+    res = jnp.asarray(rng.standard_normal((n, 9, 9, k)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(k), jnp.float32)
+    exp = ref.conv2d_fused(x, wt, stride=1, padding=pad, bias=b,
+                           residual=res, relu=True)
+    for kwargs in (dict(),                          # C unblocked, full row
+                   dict(c_blk=8, rb_q=4),           # C_b passes + Q tail
+                   dict(c_blk=8, rb_q=4, order="npkc")):
+        out = conv2d_direct(x, wt, stride=1, padding=pad, bias=b,
+                            residual=res, relu=True, rb_p=rb_p,
+                            interpret=True, **kwargs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_whole_plane_legacy_path(rng):
+    """The A/B knob: the legacy whole-plane kernel must agree bit-for-bit
+    with the tiled default."""
+    x, wt = _data(rng, 2, 9, 9, 8, 16, 3)
+    tiled = conv2d_direct(x, wt, stride=1, padding=1, rb_p=4, interpret=True)
+    whole = conv2d_direct(x, wt, stride=1, padding=1, rb_p=4,
+                          whole_plane=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(whole))
+
+
+def test_resnet_stem_tiled_regression(rng):
+    """ResNet conv1 (224x224 input, 7x7 stride-2 -> 112x112): the padded
+    input plane exceeds a small VMEM budget on the whole-plane path — the
+    shape only runs blocked.  Pin bit-exactness of the tiled kernel and
+    H*W-independence of its working set."""
+    sh = STEM_CONV
+    blk = conv_blocking_analytic(
+        h=sh["h"], w=sh["w"], c=sh["c"], k=sh["k"], r=sh["r"], s=sh["s"],
+        stride=sh["stride"], padding=sh["padding"])
+
+    def ws(shape, whole):
+        q = out_dim(shape["w"], shape["s"], shape["stride"],
+                    shape["padding"])
+        # rb_q pinned: with a fixed (rb_p, rb_q, c_blk) tile the tiled
+        # working set must not see the image size at all
+        return conv_working_set(
+            h=shape["h"], w=shape["w"], c=shape["c"], k_blk=blk.k_blk,
+            r=shape["r"], s=shape["s"], q=q, rb_p=blk.rb_p,
+            padding=shape["padding"], stride=shape["stride"],
+            c_blk=None if whole else blk.c_blk,
+            rb_q=None if whole else 16, whole_plane=whole)
+
+    small_budget = 1 << 20            # the CI kernel-tiling smoke budget
+    assert ws(STEM_CONV, whole=True) > small_budget        # legacy: too big
+    assert ws(STEM_CONV, whole=False) <= small_budget      # tiled: fits
+    # tiled working set is independent of the image size (same band)
+    assert ws(STEM_CONV, whole=False) == ws(STEM_CONV_HALF, whole=False)
+    assert ws(STEM_CONV_HALF, whole=True) < ws(STEM_CONV, whole=True)
+
+    x, wt = _data(rng, sh["n"], sh["h"], sh["w"], sh["c"], sh["k"], sh["r"])
+    out = conv2d_direct(x, wt, stride=sh["stride"], padding=sh["padding"],
+                        rb_p=blk.rb_p, rb_q=16, c_blk=sh["c"],
+                        interpret=True)
+    exp = ref.conv2d(x, wt, stride=sh["stride"], padding=sh["padding"])
+    assert out.shape == (1, 112, 112, sh["k"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pad_input_no_overpad_stride2():
+    """pad_input must stop at the last row/col the grid can touch: for
+    stride > 1 the symmetric bottom pad used to inflate the plane past it."""
+    h = w = p = 12
+    r, stride, padding = 3, 2, 1
+    p_out = (h + 2 * padding - r) // stride + 1           # 6
+    for rb_p in (2, 3, 6):                                 # rb_p | p cases
+        x = jnp.zeros((1, h, w, 8), jnp.float32)
+        q = p_out
+        xp = pad_input(x, padding=padding, stride=stride, rb_p=rb_p, r=r,
+                       p=p_out, rb_q=q, s=r, q=q)
+        rows_needed = (int(np.ceil(p_out / rb_p)) * rb_p - 1) * stride + r
+        assert xp.shape[1] == max(rows_needed, h + padding)
+        assert xp.shape[1] < h + 2 * padding              # strictly tighter
+    # ceil-div tail still covered: rb_p = 4 -> 2 blocks of 4 rows over p=6
+    xp = pad_input(jnp.zeros((1, h, w, 8), jnp.float32), padding=padding,
+                   stride=stride, rb_p=4, r=r, p=p_out, rb_q=4, s=r, q=p_out)
+    assert xp.shape[1] >= (2 * 4 - 1) * stride + r

@@ -67,6 +67,22 @@ def test_autotune_conv_persists_and_hits(tmp_path):
         tune.conv_key(dtype_bytes=4, **kw)) is not None
 
 
+def test_cached_entry_rejected_under_forced_budget(tmp_path, monkeypatch):
+    """The cache key has no VMEM-budget coordinate: an entry tuned under the
+    default 16 MiB must not serve a process with REPRO_VMEM_BUDGET forced
+    smaller — lookup revalidates vmem_bytes and falls back to analytic."""
+    c = _cache(tmp_path)
+    kw = dict(h=14, w=14, c=256, k=256, r=3, s=3, stride=1, padding=1,
+              kind="fwd", backend="xla")
+    key = tune.conv_key(dtype_bytes=4, **kw)
+    c.store(key, dict(rb_p=4, k_blk=128, c_blk=256, order="nkpc",
+                      vmem_bytes=2 << 20, rb_q=14), source="model",
+            score_us=1.0)
+    assert tune.lookup_conv(**kw, cache=c) is not None
+    monkeypatch.setattr(tune, "VMEM_BUDGET", 1 << 20)
+    assert tune.lookup_conv(**kw, cache=c) is None
+
+
 # -- blocking integration ----------------------------------------------------
 
 def test_cold_cache_falls_back_to_heuristic(tmp_path, monkeypatch):
@@ -106,7 +122,8 @@ def test_candidates_respect_constraints():
     assert len(cands) > 1
     assert cands[0] == conv_blocking_analytic(
         h=L4["h"], w=L4["w"], c=L4["c"], k=L4["k"], r=L4["r"], s=L4["s"],
-        stride=L4["stride"], padding=1)                     # seed first
+        stride=L4["stride"], padding=1,
+        whole_plane=True)       # seed first, under the streams VMEM model
     for b in cands:
         assert b.vmem_bytes <= VMEM_BUDGET
         assert L4["k"] % b.k_blk == 0
