@@ -4,7 +4,9 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   Fig 4 / Table I  -> resnet50_layers       (fwd per-layer, im2col vs direct)
   §II-B..E tiling  -> conv_fwd_bench        (tiled vs whole-plane fwd ->
                                              BENCH_conv_fwd.json baseline)
-  Fig 5 (a)(b)     -> bwd_wu_layers         (duality bwd + weight update)
+  Fig 5 (a)(b)     -> bwd_wu_layers         (tiled vs legacy update pass +
+                                             phase vs dilate duality ->
+                                             BENCH_bwd_wu.json baseline)
   Fig 8            -> reduced_precision_bench (int8 weights, §II-K analog)
   Fig 9            -> scaling_bench         (strong scaling, overlap model)
   §II-G/GxM        -> fusion_bench          (fused vs unfused + ETG stats)
@@ -65,12 +67,15 @@ def main(argv=None) -> None:
             failures += 1
             print("autotune_bench,0,FAILED", file=sys.stdout)
             traceback.print_exc()
-        # fast-path tables that still run in smoke mode (conv_fwd_bench is
-        # model-based, so the dry run also refreshes BENCH_conv_fwd.json)
+        # fast-path tables that still run in smoke mode (conv_fwd_bench and
+        # bwd_wu_layers are model-based, so the dry run also refreshes
+        # BENCH_conv_fwd.json / BENCH_bwd_wu.json)
         for name, call in (("serve_cnn_bench",
                             lambda: serve_cnn_bench.main(["--dry"])),
                            ("conv_fwd_bench",
-                            lambda: conv_fwd_bench.main([]))):
+                            lambda: conv_fwd_bench.main([])),
+                           ("bwd_wu_layers",
+                            lambda: bwd_wu_layers.main([]))):
             try:
                 call()
             except Exception:  # noqa: BLE001

@@ -1,8 +1,10 @@
 """The paper's own workload: ResNet-50 training through the GxM execution
-task graph — conv kernels with the §II-I/J backward pipeline, §II-G fusion
-at inference.
+task graph — conv kernels with the §II-I/J backward pipeline (tiled update
+pass, phase-decomposed strided duality — DESIGN.md §10), §II-G fusion at
+inference.  Training warmup pre-tunes the fwd + bwd (dual) + wu blocking
+cache so the first step never tunes inline.
 
-  PYTHONPATH=src python examples/train_resnet50_gxm.py [--full]
+  PYTHONPATH=src python examples/train_resnet50_gxm.py [--full] [--warmup]
 """
 import argparse
 
@@ -12,6 +14,7 @@ import numpy as np
 
 from repro.graph import GxM, resnet50
 from repro.graph.etg import build_etg
+from repro.train.step import make_cnn_train_step, warmup_cnn_train
 
 
 def main():
@@ -19,6 +22,8 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="full 50-layer topology (slow on CPU)")
     ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-tune fwd/bwd/wu blockings before stepping")
     args = ap.parse_args()
 
     stages = (3, 4, 6, 3) if args.full else (1, 1, 1, 1)
@@ -33,9 +38,15 @@ def main():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((8, 64, 64, 3)), jnp.float32)
     y = jnp.asarray(rng.integers(0, 10, 8))
-    step = jax.jit(m.sgd_train_step)
+    if args.warmup:
+        report = warmup_cnn_train(m, image_hw=(64, 64), minibatch=8)
+        print(f"warmup: {sum(e['cached'] for e in report)} blocking-cache "
+              f"entries across kinds "
+              f"{sorted({e['kind'] for e in report})}")
+    step = make_cnn_train_step(m, lr=0.05,
+                               autotune="cache" if args.warmup else None)
     for i in range(args.steps):
-        params, loss = step(params, {"image": x, "label": y}, lr=0.05)
+        params, loss = step(params, {"image": x, "label": y})
         if i % 5 == 0:
             print(f"step {i:3d}  loss={float(loss):.4f}")
 

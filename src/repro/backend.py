@@ -19,10 +19,17 @@ The *blocking* each specialization uses is governed by the autotune knob
 
 See ``repro.tune`` and DESIGN.md §6.
 
-The forward conv's *input strategy* has its own knob (``REPRO_CONV_TILING``
+The conv *input strategy* has its own knob (``REPRO_CONV_TILING``
 / ``set_conv_tiling``): "tiled" (default) streams row bands with a VMEM
 working set independent of the image size, "whole" is the legacy
-whole-plane kernel kept for A/B comparison.  See DESIGN.md §9.
+whole-plane kernel kept for A/B comparison.  It governs both the forward
+kernel (DESIGN.md §9) and the weight-update kernel (DESIGN.md §10).
+
+The strided backward-data plan (``REPRO_BWD_DUALITY`` / ``set_bwd_duality``)
+selects how the generic §II-I duality case runs: "phase" (default)
+decomposes into stride² forward sub-convs over the *undilated* dO — no
+intermediate tensor, no multiply-by-zero work; "dilate" is the legacy
+materialize-the-dilated-dO plan kept for A/B.  See DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -32,9 +39,17 @@ from contextlib import contextmanager
 _VALID = ("pallas", "interpret", "xla")
 _VALID_AUTOTUNE = ("off", "cache", "tune")
 _VALID_CONV_TILING = ("tiled", "whole")
+_VALID_BWD_DUALITY = ("phase", "dilate")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
 _autotune = os.environ.get("REPRO_AUTOTUNE", "off")
 _conv_tiling = os.environ.get("REPRO_CONV_TILING", "tiled")
+_bwd_duality = os.environ.get("REPRO_BWD_DUALITY", "phase")
+if _bwd_duality not in _VALID_BWD_DUALITY:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_BWD_DUALITY="
+          f"{_bwd_duality!r} (valid: {', '.join(_VALID_BWD_DUALITY)}); "
+          f"using phase", file=sys.stderr)
+    _bwd_duality = "phase"
 if _autotune not in _VALID_AUTOTUNE:
     import sys
     print(f"repro.backend: ignoring invalid REPRO_AUTOTUNE={_autotune!r} "
@@ -125,3 +140,27 @@ def use_conv_tiling(mode: str):
         yield
     finally:
         _conv_tiling = prev
+
+
+def get_bwd_duality() -> str:
+    """Generic strided backward-data plan: "phase" runs stride² forward
+    sub-convs over the undilated dO (zero-free — the default); "dilate" is
+    the legacy materialized-dilation plan, kept for A/B benchmarking."""
+    return _bwd_duality
+
+
+def set_bwd_duality(mode: str) -> None:
+    global _bwd_duality
+    assert mode in _VALID_BWD_DUALITY, mode
+    _bwd_duality = mode
+
+
+@contextmanager
+def use_bwd_duality(mode: str):
+    global _bwd_duality
+    prev = _bwd_duality
+    set_bwd_duality(mode)
+    try:
+        yield
+    finally:
+        _bwd_duality = prev

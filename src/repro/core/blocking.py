@@ -7,9 +7,10 @@ analogous constraints are:
   (a) the implicit-GEMM M-tile (rb_p * Q) should be >= 128 rows so the MXU
       runs full-height passes (the "FMA latency" of the systolic array is the
       pipeline fill, amortized by tall tiles);
-  (b) the per-grid-step working set (streamed input row band — or resident
-      plane for the legacy whole-plane/wu kernels — + weight block + output
-      tile + accumulator) must fit the VMEM budget;
+  (b) the per-grid-step working set (streamed input row band for the tiled
+      fwd/bwd/wu kernels — or resident plane for the legacy whole-plane
+      variants and streams — + weight/dO block + output/accumulator tile)
+      must fit the VMEM budget;
   (c) minor dims should be multiples of 128 lanes / 8 sublanes (K, C blocks).
 
 Two selection paths (DESIGN.md §3, §6):
@@ -67,14 +68,21 @@ def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
                      q: int, rb_p: int, padding: int, dtype_bytes: int = 4,
                      stride: int = 1, c_blk: int | None = None,
                      rb_q: int | None = None,
-                     whole_plane: bool = False) -> int:
+                     whole_plane: bool = False,
+                     kind: str = "fwd") -> int:
     """Modeled per-grid-step VMEM bytes for a conv blocking candidate.
 
     Tiled (default): the input contribution is one streamed row band —
     ``((rb_p-1)*stride + r) x ((rb_q-1)*stride + s) x c_blk`` — so the
     working set is independent of H*W.  ``whole_plane=True`` models the
-    legacy kernels (fwd whole-plane variant, wu, q8, streams) that keep the
-    full padded plane resident; there it scales with H*W*c_blk.
+    legacy kernels (fwd whole-plane variant, legacy wu, q8, streams) that
+    keep the full padded plane resident; there it scales with H*W*c_blk.
+
+    ``kind`` picks the residency model: "fwd"/"bwd" (the forward kernel —
+    the bwd-data dual *is* a forward launch) hold a weight block and an
+    output tile + f32 accumulator next to the input; "wu" (the update pass)
+    holds a dO pixel tile and the revisited (r, s, C_blk, K_blk) f32
+    weight-gradient accumulator tile instead.
     """
     c_blk = c if not c_blk else c_blk
     rb_q = q if not rb_q else rb_q
@@ -85,6 +93,10 @@ def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
         band_h = (rb_p - 1) * stride + r
         band_w = (rb_q - 1) * stride + s
         x_bytes = band_h * band_w * c_blk * dtype_bytes
+    if kind == "wu":
+        do_tile = rb_p * rb_q * k_blk * dtype_bytes
+        dw_acc = r * s * c_blk * k_blk * 4           # f32 revisited tile
+        return x_bytes + do_tile + dw_acc
     wblk = r * s * c_blk * k_blk * dtype_bytes
     out = rb_p * rb_q * k_blk * dtype_bytes
     acc = rb_p * rb_q * k_blk * 4
@@ -95,24 +107,31 @@ def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
                            stride: int, padding: int, dtype_bytes: int = 4,
                            vmem_budget: int = VMEM_BUDGET,
                            require_divisor: bool = False,
-                           whole_plane: bool | None = None) -> ConvBlocking:
+                           whole_plane: bool | None = None,
+                           kind: str = "fwd") -> ConvBlocking:
     """Closed-form heuristic (no cache consulted).
 
     ``whole_plane`` (default: ``require_divisor``) selects the resident-
-    plane VMEM model: the wu kernel (which also needs rb_p | P) keeps the
-    *full-C* padded plane in VMEM, the streams kernel a C_blk slice of it.
-    The forward path is tiled: the working set is the streamed row band, so
-    the budget constrains the *band* — C stays unblocked (single
-    accumulation pass) and RB_Q the full row unless the band itself would
-    not fit, which is exactly the large-image regime the tiling exists for.
+    plane VMEM model: the *legacy* wu kernel (which also needs rb_p | P)
+    keeps the full-C padded plane in VMEM, the streams kernel a C_blk slice
+    of it.  The forward path — and, with ``kind="wu"`` and
+    ``require_divisor=False``, the tiled update pass — is band-streamed: the
+    working set is the row band, so the budget constrains the *band* — C
+    stays unblocked (single accumulation pass) and RB_Q the full row unless
+    the band itself would not fit, which is exactly the large-image regime
+    the tiling exists for.  ``kind`` selects the per-step residency model of
+    ``conv_working_set`` ("bwd" — the dual forward launch — models as
+    "fwd").
     """
     p = (h + 2 * padding - r) // stride + 1
     q = (w + 2 * padding - s) // stride + 1
     k_blk = aligned_block(k)
     whole = require_divisor if whole_plane is None else whole_plane
+    ws_kind = "wu" if kind == "wu" else "fwd"
 
     # c_blk is the reported blocking knob; c_model is what sits in VMEM
-    # (the wu kernel has no C blocking — its plane is resident at full C)
+    # (the legacy wu kernel has no C blocking — its plane is resident at
+    # full C)
     rb_q = q
     if require_divisor:
         c_blk, c_model = aligned_block(c), c
@@ -125,7 +144,8 @@ def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
         return conv_working_set(h=h, w=w, c=c, k_blk=k_blk, r=r, s=s, q=q,
                                 rb_p=rb_p, padding=padding,
                                 dtype_bytes=dtype_bytes, stride=stride,
-                                c_blk=c_m, rb_q=rb_q, whole_plane=whole)
+                                c_blk=c_m, rb_q=rb_q, whole_plane=whole,
+                                kind=ws_kind)
 
     if not whole:
         # prefer a single accumulation pass (c_blk = c); fall back to the
@@ -136,13 +156,18 @@ def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
             rb_q = math.ceil(rb_q / 2)          # wide image: block the row
 
     cands = divisors(p) if require_divisor else list(range(1, p + 1))
-    # smallest rb_p with a full-height MXU M-tile, then grow while VMEM allows
+    # smallest rb_p with a full-height MXU M-tile, then grow while VMEM
+    # allows.  The band-streamed update pass keeps growing to the budget:
+    # its row band is refetched once per P-block on every (K_b, C_b) pass,
+    # so a taller block strictly cuts refetch traffic (and deepens the
+    # pixel-block contraction) — there is no output-tile reuse to trade off.
+    grow_to_budget = kind == "wu" and not whole
     best = cands[0]
     for rb in cands:
         if ws(rb, c_model, rb_q) > vmem_budget:
             break
         best = rb
-        if rb * rb_q >= MXU:
+        if rb * rb_q >= MXU and not grow_to_budget:
             break
     # §II-C: for 1x1 convs pull the C loop in (order "npkc" keeps the output
     # tile resident across C-blocks -> more output register reuse).
@@ -165,7 +190,10 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
     at defaults they resolve through ``repro.backend`` (autotune defaults
     "off", preserving the seed's pure-analytic behavior and every existing
     call site).  `minibatch` is part of the tuning key: the winning blocking
-    depends on how much batch-reuse amortizes weight traffic.
+    depends on how much batch-reuse amortizes weight traffic.  Kinds:
+    "fwd" (tiled forward), "bwd" (the backward-data dual — same kernel,
+    separate cache namespace), "wu" (band-streamed update pass; with
+    ``require_divisor=True`` the legacy resident-plane variant), "streams".
     """
     mode = _resolve_autotune(autotune)
     kind = kind or ("wu" if require_divisor else "fwd")
@@ -182,7 +210,9 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
                                   dtype_bytes=dtype_bytes,
                                   vmem_budget=vmem_budget,
                                   require_divisor=require_divisor,
-                                  whole_plane=(kind != "fwd"))
+                                  whole_plane=(True if kind == "streams"
+                                               else None),
+                                  kind=kind)
 
 
 @dataclasses.dataclass(frozen=True)

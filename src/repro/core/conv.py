@@ -38,11 +38,13 @@ def lane_ok(c: int, k: int) -> bool:
 
 def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
                shift=None, residual=None, relu=False, impl=None,
-               autotune=None):
+               autotune=None, kind="fwd"):
     """Fused forward conv; dispatches on the selected implementation.
 
     `autotune` (None -> ``repro.backend`` knob) selects how the blocking is
     chosen: "off" analytic, "cache" tuned-if-cached, "tune" search+persist.
+    `kind` is the tuner-cache namespace ("fwd", or "bwd" when this forward
+    launch is a backward-data dual conv — same kernel, separately tuned key).
     """
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
@@ -53,7 +55,7 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
                                 residual=residual, relu=relu)
     blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=r, s=s, stride=stride,
                         padding=padding, dtype_bytes=x.dtype.itemsize,
-                        backend=impl, autotune=autotune, kind="fwd",
+                        backend=impl, autotune=autotune, kind=kind,
                         minibatch=n)
     return conv2d_direct(x, w, stride=stride, padding=padding, bias=bias,
                          scale=scale, shift=shift, residual=residual,
@@ -63,31 +65,61 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
 
 
 def conv2d_bwd_data_via_fwd(do, w, *, stride, padding, input_hw, impl=None,
-                            autotune=None):
-    """dI using the §II-I duality: transform weights, run the fwd kernel."""
+                            autotune=None, mode=None):
+    """dI using the §II-I duality: transform weights, run the fwd kernel.
+
+    The generic (stride > 1, R,S > 1) case follows ``mode`` / the
+    ``REPRO_BWD_DUALITY`` knob: "phase" (default) launches stride² forward
+    sub-convs over the *undilated* dO — no dilated intermediate is ever
+    allocated; "dilate" is the legacy materialized plan kept for A/B.
+    Every forward launch tunes/looks up its blocking under kind "bwd".
+    """
+    r, s = w.shape[0], w.shape[1]
+    scenario, _ = duality.bwd_data_plan(r=r, s=s, stride=stride,
+                                        padding=padding, input_hw=input_hw,
+                                        mode=mode)
+    if scenario == "phase":
+        return duality.phase_bwd_data(
+            do, w, stride=stride, padding=padding, input_hw=input_hw,
+            conv_fn=lambda a, b, st, pd: conv2d_fwd(
+                a, b, stride=st, padding=pd, impl=impl, autotune=autotune,
+                kind="bwd"))
     do2, wt, kw, post = duality.prepare_bwd_data(
-        do, w, stride=stride, padding=padding, input_hw=input_hw)
+        do, w, stride=stride, padding=padding, input_hw=input_hw, mode=mode)
     y = conv2d_fwd(do2, wt, stride=kw["stride"], padding=kw["padding"],
-                   impl=impl, autotune=autotune)
+                   impl=impl, autotune=autotune, kind="bwd")
     return post(y)
 
 
 def conv2d_bwd_weights(x, do, *, stride, padding, filter_rs, impl=None,
-                       autotune=None):
-    """dW via the update-pass kernel (§II-J)."""
+                       autotune=None, whole_plane=None):
+    """dW via the update-pass kernel (§II-J).
+
+    The default tiled kernel streams row bands and blocks C/Q with ceil-div
+    tails (no divisibility constraints); ``whole_plane`` (default: the
+    ``repro.backend`` conv-tiling knob) selects the legacy resident-plane
+    kernel, which still needs ``rb_p | P`` (``require_divisor``)."""
     impl = be.resolve(impl)
     n, h, wdt, c = x.shape
     _, p, q, k = do.shape
     if impl == "xla" or not lane_ok(c, k):
         return ref.conv2d_bwd_weights(x, do, stride=stride, padding=padding,
                                       filter_rs=filter_rs)
+    if whole_plane is None:
+        whole_plane = be.get_conv_tiling() == "whole"
     blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=filter_rs[0], s=filter_rs[1],
                         stride=stride, padding=padding,
-                        dtype_bytes=x.dtype.itemsize, require_divisor=True,
+                        dtype_bytes=x.dtype.itemsize,
+                        require_divisor=whole_plane,
                         backend=impl, autotune=autotune, kind="wu",
                         minibatch=n)
+    if whole_plane:
+        return conv2d_wu(x, do, stride=stride, padding=padding,
+                         filter_rs=filter_rs, b_p=blk.rb_p, k_blk=blk.k_blk,
+                         whole_plane=True, interpret=(impl == "interpret"))
     return conv2d_wu(x, do, stride=stride, padding=padding,
                      filter_rs=filter_rs, b_p=blk.rb_p, k_blk=blk.k_blk,
+                     c_blk=blk.c_blk, rb_q=blk.rb_q, whole_plane=False,
                      interpret=(impl == "interpret"))
 
 

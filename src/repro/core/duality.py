@@ -3,16 +3,46 @@ as a *forward* convolution over a transformed weight tensor, so one
 high-performance forward kernel serves both passes ("duality ... to reduce
 number of code generators").
 
-Scenario 1 (stride == 1):       W'[r',s',k,c] = W[R-1-r', S-1-s', c, k]
-                                dI = conv(dO, W', pad = R-1-pad)
-Scenario 2 (R == S == 1):       dI[:, ::stride, ::stride] = conv(dO, W^T)
-Generic (stride>1 and R,S>1):   dilate dO by stride, then scenario 1 —
-                                the small-GEMM fallback of Algorithm 7,
-                                expressed as one more forward conv.
+Scenario "stride1" (stride == 1):  W'[r',s',k,c] = W[R-1-r', S-1-s', c, k]
+                                   dI = conv(dO, W', pad = R-1-pad)
+Scenario "1x1"   (R == S == 1):    dI[:, ::stride, ::stride] = conv(dO, W^T)
+Generic (stride>1 and R,S>1) — two interchangeable plans:
+
+  "phase"  (default)  stride² *phase sub-convolutions* over the undilated
+           dO: input row y belongs to phase (y+pad) mod stride, and only the
+           filter taps r ≡ (y+pad) (mod stride) ever touch it, so dI's
+           stride×stride subgrids are each an ordinary stride-1 forward conv
+           of dO with a flipped/KC-transposed sub-filter — the Algorithm-7
+           small-GEMM fallback expressed with *no* dilated tensor and no
+           multiply-by-zero FLOPs (cuDNN's implicit fractionally-strided
+           conv; the zero-memory-overhead discipline of Zhang et al. 2018).
+  "dilate" (A/B baseline, knob ``REPRO_BWD_DUALITY=dilate``) dilate dO by
+           stride, then scenario "stride1" — one more forward conv, but over
+           a plane that is ~stride² zeros.
+
+The phase plan is a pure function of the conv geometry (``phase_plan``), so
+``dual_conv_signatures`` can enumerate the exact forward-conv shapes the
+backward pass will launch — that is what lets training warmup pre-tune the
+"bwd" blocking cache entries (``tune.warmup_convs``).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
+from jax import lax
+
+VALID_MODES = ("phase", "dilate")
+
+
+def resolve_mode(mode: str | None) -> str:
+    """Generic-scenario plan: explicit ``mode`` wins, else the
+    ``REPRO_BWD_DUALITY`` / ``repro.backend`` knob."""
+    if mode is None:
+        from repro import backend as be
+        mode = be.get_bwd_duality()
+    assert mode in VALID_MODES, mode
+    return mode
 
 
 def transform_weights(w):
@@ -21,39 +51,187 @@ def transform_weights(w):
 
 
 def dilate(x, stride: int):
-    """Insert stride-1 zeros between spatial elements of x (N,P,Q,K)."""
+    """Insert stride-1 zeros between spatial elements of x (N,P,Q,K).
+
+    One scatter-free ``lax.pad`` with interior padding — a single fused HBM
+    write, not the zeros-buffer + ``.at[].set`` pair (two HBM-sized buffers)
+    the seed used.
+    """
     if stride == 1:
         return x
-    n, p, q, k = x.shape
-    out = jnp.zeros((n, (p - 1) * stride + 1, (q - 1) * stride + 1, k),
-                    dtype=x.dtype)
-    return out.at[:, ::stride, ::stride, :].set(x)
+    zero = jnp.zeros((), x.dtype)
+    return lax.pad(x, zero, ((0, 0, 0), (0, 0, stride - 1),
+                             (0, 0, stride - 1), (0, 0, 0)))
 
+
+# -- the phase decomposition --------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhaseAxis:
+    """One spatial axis of one phase sub-convolution.
+
+    ``res`` is the dI residue class this phase fills (y ≡ res mod stride);
+    ``phi = (res + pad) mod stride`` selects the filter taps (r ≡ phi);
+    ``taps`` how many such taps exist (0 -> this phase carries zero
+    gradient); ``lo``/``hi`` the explicit dO padding of the stride-1 dual
+    conv; ``off`` the first dual-output row belonging to the phase; ``count``
+    how many dI rows the phase owns.
+    """
+    res: int
+    phi: int
+    taps: int
+    lo: int
+    hi: int
+    off: int
+    count: int
+
+
+def _phase_axis(res: int, *, f: int, stride: int, padding: int, in_dim: int,
+                out_dim: int) -> PhaseAxis:
+    phi = (res + padding) % stride
+    taps = len(range(phi, f, stride))
+    count = max(-(-(in_dim - res) // stride), 0)
+    off = (res + padding - phi) // stride
+    lo = taps - 1
+    hi = max(off + count - out_dim, 0)
+    return PhaseAxis(res=res, phi=phi, taps=taps, lo=lo, hi=hi, off=off,
+                     count=count)
+
+
+def phase_plan(*, r: int, s: int, stride: int, padding: int,
+               input_hw: tuple[int, int],
+               out_hw: tuple[int, int]) -> list[tuple[PhaseAxis, PhaseAxis]]:
+    """The stride² phase sub-convolutions of the generic backward-data plan,
+    as (row-axis, col-axis) pairs — one per dI subgrid, in row-major residue
+    order.  Phases with zero filter taps (possible when stride > R) are
+    included with ``taps == 0`` so callers can emit zeros for them."""
+    h, w = input_hw
+    p, q = out_hw
+    plans = []
+    for ry in range(stride):
+        ax_y = _phase_axis(ry, f=r, stride=stride, padding=padding,
+                           in_dim=h, out_dim=p)
+        for rx in range(stride):
+            ax_x = _phase_axis(rx, f=s, stride=stride, padding=padding,
+                               in_dim=w, out_dim=q)
+            plans.append((ax_y, ax_x))
+    return plans
+
+
+def phase_bwd_data(do, w, *, stride: int, padding: int,
+                   input_hw: tuple[int, int], conv_fn):
+    """dI via the stride² phase sub-convolutions (no dilated dO anywhere).
+
+    ``conv_fn(x, w, stride, padding)`` runs a forward conv — the caller
+    injects ``core.conv.conv2d_fwd`` so every sub-conv goes through the same
+    tuned tiled kernel (blocking kind "bwd") as the rest of the stack.
+    """
+    r, s, c, k = w.shape
+    n, p, q, _ = do.shape
+    h, wdt = input_hw
+    st = stride
+    ph, pw = -(-h // st), -(-wdt // st)        # interleave grid (ceil-div)
+    rows = []
+    for ax_y, ax_x in phase_plan(r=r, s=s, stride=st, padding=padding,
+                                 input_hw=(h, wdt), out_hw=(p, q)):
+        if ax_y.taps == 0 or ax_x.taps == 0:
+            yp = jnp.zeros((n, ph, pw, c), do.dtype)
+        else:
+            sub = transform_weights(
+                w[ax_y.phi::st, ax_x.phi::st])          # (taps_y, taps_x, k, c)
+            dop = jnp.pad(do, ((0, 0), (ax_y.lo, ax_y.hi),
+                               (ax_x.lo, ax_x.hi), (0, 0)))
+            y = conv_fn(dop, sub, 1, 0)
+            yp = y[:, ax_y.off:ax_y.off + ax_y.count,
+                   ax_x.off:ax_x.off + ax_x.count, :]
+            yp = jnp.pad(yp, ((0, 0), (0, ph - ax_y.count),
+                              (0, pw - ax_x.count), (0, 0)))
+        rows.append(yp)
+    # interleave the stride×stride subgrids back into the (h, w) plane:
+    # a reshape/transpose XLA fuses, not a scatter chain
+    a = jnp.stack(rows).reshape(st, st, n, ph, pw, c)
+    a = a.transpose(2, 3, 0, 4, 1, 5)          # (n, ph, st_y, pw, st_x, c)
+    return a.reshape(n, ph * st, pw * st, c)[:, :h, :wdt, :]
+
+
+def dual_conv_signatures(*, r: int, s: int, c: int, k: int, stride: int,
+                         padding: int, input_hw: tuple[int, int],
+                         mode: str | None = None,
+                         unique: bool = True) -> list[dict]:
+    """The exact forward-conv signatures the backward-data pass launches for
+    this layer — h/w are the (pre-padded) dO plane each sub-conv sees, C/K
+    are swapped by the duality transform.  Keyed the same way
+    ``core.conv.conv2d_fwd`` keys its blocking lookups (tuner kind "bwd"),
+    so warming these signatures means the first training step never tunes
+    inline (``tune.warmup_convs``).  ``unique=False`` keeps duplicate phase
+    signatures (phases with identical geometry are still *separate*
+    launches — what the cost model must count)."""
+    h, wdt = input_hw
+    p = (h + 2 * padding - r) // stride + 1
+    q = (wdt + 2 * padding - s) // stride + 1
+    if stride == 1:
+        return [dict(h=p, w=q, c=k, k=c, r=r, s=s, stride=1,
+                     padding=r - 1 - padding)]
+    if r == 1 and s == 1:
+        return [dict(h=p, w=q, c=k, k=c, r=1, s=1, stride=1, padding=0)]
+    if resolve_mode(mode) == "dilate":
+        pd = (p - 1) * stride + 1
+        qd = (q - 1) * stride + 1
+        top = r - 1 - padding
+        left = s - 1 - padding
+        bottom = max(h + padding - (p - 1) * stride - 1, 0)
+        right = max(wdt + padding - (q - 1) * stride - 1, 0)
+        return [dict(h=pd + top + bottom, w=qd + left + right, c=k, k=c,
+                     r=r, s=s, stride=1, padding=0)]
+    sigs, seen = [], set()
+    for ax_y, ax_x in phase_plan(r=r, s=s, stride=stride, padding=padding,
+                                 input_hw=(h, wdt), out_hw=(p, q)):
+        if ax_y.taps == 0 or ax_x.taps == 0:
+            continue
+        sig = dict(h=p + ax_y.lo + ax_y.hi, w=q + ax_x.lo + ax_x.hi,
+                   c=k, k=c, r=ax_y.taps, s=ax_x.taps, stride=1, padding=0)
+        key = tuple(sorted(sig.items()))
+        if not unique or key not in seen:
+            seen.add(key)
+            sigs.append(sig)
+    return sigs
+
+
+# -- plan selection -----------------------------------------------------------
 
 def bwd_data_plan(*, r: int, s: int, stride: int, padding: int,
-                  input_hw: tuple[int, int]):
+                  input_hw: tuple[int, int], mode: str | None = None):
     """Return (scenario, fwd-conv parameters) implementing dI = dual-fwd.
 
     The returned plan is consumed by ``core.conv.conv2d_bwd_data_via_fwd``
-    which runs the *forward* kernel.  scenario ∈ {"stride1", "1x1", "generic"}.
+    which runs the *forward* kernel.  scenario ∈ {"stride1", "1x1", "phase",
+    "dilate"}; the generic (stride > 1, R,S > 1) case picks "phase" or
+    "dilate" per ``mode`` / the ``REPRO_BWD_DUALITY`` knob.
     """
     if stride == 1:
         return ("stride1", dict(stride=1, padding=r - 1 - padding))
     if r == 1 and s == 1:
         return ("1x1", dict(stride=1, padding=0))
-    return ("generic", dict(stride=1, padding=r - 1 - padding))
+    if resolve_mode(mode) == "dilate":
+        return ("dilate", dict(stride=1, padding=0))
+    return ("phase", dict(stride=1, padding=0,
+                          n_phases=stride * stride))
 
 
 def prepare_bwd_data(do, w, *, stride: int, padding: int,
-                     input_hw: tuple[int, int]):
-    """Transform (dO, W) so a plain forward conv yields dI.
+                     input_hw: tuple[int, int], mode: str | None = None):
+    """Transform (dO, W) so a *single* plain forward conv yields dI.
 
-    Returns (do', w', fwd_kwargs, post) where post(y) -> dI.
+    Returns (do', w', fwd_kwargs, post) where post(y) -> dI.  Only the
+    single-conv scenarios land here; the "phase" plan is multi-conv and is
+    executed by ``phase_bwd_data`` (``core.conv`` dispatches on
+    ``bwd_data_plan``'s scenario).
     """
     r, s, c, k = w.shape
     h, wdt = input_hw
     scenario, kw = bwd_data_plan(r=r, s=s, stride=stride, padding=padding,
-                                 input_hw=input_hw)
+                                 input_hw=input_hw, mode=mode)
+    assert scenario != "phase", "phase plan is multi-conv: use phase_bwd_data"
     wt = transform_weights(w)
 
     def fit(y):
@@ -75,9 +253,9 @@ def prepare_bwd_data(do, w, *, stride: int, padding: int,
             return out.at[:, :(p - 1) * stride + 1:stride,
                           :(q - 1) * stride + 1:stride, :].set(y)
         return do, wt, kw, post
-    # Generic: dilate dO, then it is the stride-1 dual.  When the forward
-    # conv floored ((h + 2p - r) % stride != 0) the dual needs *asymmetric*
-    # padding — pre-pad explicitly and run the kernel pad-free.
+    # Dilate (A/B baseline): dilate dO, then it is the stride-1 dual.  When
+    # the forward conv floored ((h + 2p - r) % stride != 0) the dual needs
+    # *asymmetric* padding — pre-pad explicitly and run the kernel pad-free.
     p, q = do.shape[1], do.shape[2]
     dod = dilate(do, stride)
     top = r - 1 - padding

@@ -1,17 +1,37 @@
 """Weight-gradient ("update pass") Pallas kernel — paper §II-J / Algorithm 9.
 
-Each grid step computes the contribution of one (image, row-block) to a full
-(R, S, C, K_blk) weight-gradient tile: for every static (r, s) it performs the
-small GEMM  dW[r,s] += X_rs^T @ dO_tile  with M=C, N=K_blk, K=B_P*Q — the
-transpose-free analog of the paper's VLENxVLEN microkernel (on the MXU the
-contraction runs over the pixel block, so the "register blocking up to VLEN"
-becomes a (C, K_blk) accumulator tile resident in VMEM).
+Each grid step computes the contribution of one (image, row-block, col-block)
+to a (R, S, C_blk, K_blk) weight-gradient tile: for every static (r, s) it
+performs the small GEMM  dW[r,s] += X_rs^T @ dO_tile  with M=C_blk, N=K_blk,
+K=B_P*B_Q — the transpose-free analog of the paper's VLENxVLEN microkernel
+(on the MXU the contraction runs over the pixel block, so the "register
+blocking up to VLEN" becomes a (C_blk, K_blk) accumulator tile resident in
+VMEM).
 
-Accumulation across (n, p_b) uses the Pallas revisiting-output pattern: the
-output block index is constant over the (n, p_b) sweep, the tile stays in
-VMEM, and we zero-init on the first visit.  The cross-chip part of the
-paper's §II-J reduction trade-off (shared dW vs. per-thread copies) lives in
-``core/wu_strategy.py``.
+Tiled (default, the PR-3 forward discipline brought to the update pass):
+
+  * the grid is ``(K_b, C_b, N, P_b, Q_b)`` — the dW tile index depends only
+    on the two outer axes, so the Pallas revisiting-output pattern keeps one
+    (r, s, C_blk, K_blk) f32 tile in VMEM across the whole (n, p, q) sweep,
+    zero-initialized on the first visit of each (k, c) block pair;
+  * the input BlockSpec streams only the ``(b_p-1)*stride + r`` row band
+    (x ``(rb_q-1)*stride + s`` columns x C_blk channels) each step actually
+    reads, via unblocked index_maps over the padded plane — the VMEM working
+    set is independent of H*W (``core.blocking.conv_working_set``);
+  * P and Q use ceil-div grids: the dO tail block's out-of-range rows/cols
+    are masked to zero in-kernel (loads of a tail input block are allowed but
+    carry garbage), so every layer schedules — no ``P % b_p == 0``
+    restriction, the 224x224 7x7 stem included.
+
+The pre-refactor variant that shipped the **entire padded input plane per
+image** into VMEM at every grid step (and could not block C or Q, and
+required ``b_p | P``) is kept as ``whole_plane=True`` (knob:
+``REPRO_CONV_TILING=whole`` / ``repro.backend.set_conv_tiling``) for A/B
+benchmarking — ``benchmarks/bwd_wu_layers.py`` writes the comparison to
+``BENCH_bwd_wu.json``.
+
+The cross-chip part of the paper's §II-J reduction trade-off (shared dW vs.
+per-thread copies) lives in ``core/wu_strategy.py``.
 """
 from __future__ import annotations
 
@@ -25,8 +45,46 @@ from jax.experimental import pallas as pl
 from repro.kernels.conv2d_direct import pad_input
 
 
-def _kernel(x_ref, do_ref, o_ref, *, b_p: int, q: int, stride: int,
-            r: int, s: int, accum_dtype):
+def _kernel_tiled(x_ref, do_ref, o_ref, *, b_p: int, rb_q: int, stride: int,
+                  r: int, s: int, p: int, q: int, accum_dtype):
+    """One band-streamed update-pass step: accumulate this (n, p, q) block's
+    contribution into the resident (r, s, C_blk, K_blk) dW tile."""
+    ni = pl.program_id(2)
+    pb = pl.program_id(3)
+    qb = pl.program_id(4)
+
+    first = jnp.logical_and(jnp.logical_and(ni == 0, pb == 0), qb == 0)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    c_blk = x_ref.shape[-1]
+    k_blk = do_ref.shape[-1]
+    g = do_ref[0].astype(accum_dtype)                 # (b_p, rb_q, k_blk)
+    if p % b_p or q % rb_q:
+        # ceil-div tail: the dO block read past (P, Q) is garbage — zero it
+        # so it contributes nothing to the accumulation (the fwd kernel's
+        # masked-store trick is not available here: dO is an *input*).
+        rows = pb * b_p + jax.lax.broadcasted_iota(jnp.int32, (b_p, rb_q), 0)
+        cols = qb * rb_q + jax.lax.broadcasted_iota(jnp.int32, (b_p, rb_q), 1)
+        g = jnp.where(((rows < p) & (cols < q))[..., None], g, 0)
+    g = g.reshape(b_p * rb_q, k_blk)
+    for rr in range(r):
+        for ss in range(s):
+            xs = x_ref[0, pl.dslice(rr, b_p, stride),
+                       pl.dslice(ss, rb_q, stride), :]    # (b_p, rb_q, c_blk)
+            a = xs.reshape(b_p * rb_q, c_blk).astype(accum_dtype)
+            # dW[r,s] += A^T @ G : contract over the pixel block.
+            o_ref[rr, ss, :, :] += jax.lax.dot_general(
+                a, g, (((0,), (0,)), ((), ())),
+                preferred_element_type=accum_dtype)
+
+
+def _kernel_whole(x_ref, do_ref, o_ref, *, b_p: int, q: int, stride: int,
+                  r: int, s: int, accum_dtype):
+    """Legacy update-pass step: whole padded plane resident, row selection
+    via the P-block program id (kept for A/B benchmarking)."""
     n_i = pl.program_id(1)
     pb = pl.program_id(2)
 
@@ -43,7 +101,6 @@ def _kernel(x_ref, do_ref, o_ref, *, b_p: int, q: int, stride: int,
             xs = x_ref[0, pl.dslice(row0 + rr, b_p, stride),
                        pl.dslice(ss, q, stride), :]           # (b_p, q, c)
             a = xs.reshape(b_p * q, c).astype(accum_dtype)
-            # dW[r,s] += A^T @ G : contract over the pixel block.
             upd = jax.lax.dot_general(
                 a, g, (((0,), (0,)), ((), ())),
                 preferred_element_type=accum_dtype)           # (c, k_blk)
@@ -52,23 +109,85 @@ def _kernel(x_ref, do_ref, o_ref, *, b_p: int, q: int, stride: int,
 
 def conv2d_wu(x, do, *, stride: int = 1, padding: int = 0,
               filter_rs: tuple[int, int], b_p: int = 7,
-              k_blk: int | None = None, accum_dtype=jnp.float32,
-              interpret: bool = False):
+              k_blk: int | None = None, c_blk: int | None = None,
+              rb_q: int | None = None, accum_dtype=jnp.float32,
+              whole_plane: bool | None = None, interpret: bool = False):
     """dW (R,S,C,K) from x (N,H,W,C) and dO (N,P,Q,K).
 
-    `b_p` is the paper's B_P spatial blocking of the update pass; B_Q is the
-    full row.  Requires P % b_p == 0 (the blocking heuristic only proposes
-    divisors — the paper likewise picks blockings "depending on the layer
-    characteristics").
+    ``b_p``/``rb_q`` are the paper's B_P/B_Q spatial blocking of the update
+    pass (``rb_q=None`` = the full row); ``k_blk``/``c_blk`` block the
+    output/input features (``c_blk=None`` = unblocked).  P and Q grids are
+    ceil-div — tails are masked in-kernel, so no divisibility of the spatial
+    dims is required.  ``whole_plane`` selects the legacy resident-plane
+    kernel (default: the ``repro.backend`` conv-tiling knob); that path keeps
+    the seed's ``P % b_p == 0`` restriction.
     """
     n, h, wdt, c = x.shape
     _, p, q, k = do.shape
     r, s = filter_rs
     b_p = min(b_p, p)
-    assert p % b_p == 0, (p, b_p)
     if k_blk is None:
         k_blk = min(k, 128)
-    assert k % k_blk == 0
+    assert k % k_blk == 0, (k, k_blk)
+    if whole_plane is None:
+        from repro import backend as be
+        whole_plane = be.get_conv_tiling() == "whole"
+
+    if whole_plane:
+        return _conv2d_wu_whole(x, do, stride=stride, padding=padding,
+                                r=r, s=s, b_p=b_p, k_blk=k_blk,
+                                accum_dtype=accum_dtype, interpret=interpret)
+
+    rb_q = q if rb_q in (None, 0) else min(rb_q, q)
+    c_blk = c if c_blk in (None, 0) else c_blk
+    assert c % c_blk == 0, (c, c_blk)
+
+    xp = pad_input(x, padding=padding, stride=stride, rb_p=b_p, r=r, p=p,
+                   rb_q=rb_q, s=s, q=q)
+    band_h = (b_p - 1) * stride + r
+    band_w = (rb_q - 1) * stride + s
+    p_b = math.ceil(p / b_p)
+    q_b = math.ceil(q / rb_q)
+    k_b = k // k_blk
+    c_b = c // c_blk
+    # dW tile constant over the inner (n, p_b, q_b) sweep -> one VMEM-resident
+    # accumulation pass per (k, c) block pair.
+    grid = (k_b, c_b, n, p_b, q_b)
+
+    kern = functools.partial(_kernel_tiled, b_p=b_p, rb_q=rb_q, stride=stride,
+                             r=r, s=s, p=p, q=q, accum_dtype=accum_dtype)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            # Row-band streaming: unblocked indexing (element offsets) —
+            # consecutive bands overlap by the (r - stride)-row halo and are
+            # not aligned to any fixed block size.  pad_input guarantees the
+            # last band stays in bounds.
+            pl.BlockSpec((1, band_h, band_w, c_blk),
+                         lambda ki, ci, ni, pi, qi:
+                             (ni, pi * b_p * stride, qi * rb_q * stride,
+                              ci * c_blk),
+                         indexing_mode=pl.unblocked),
+            pl.BlockSpec((1, b_p, rb_q, k_blk),
+                         lambda ki, ci, ni, pi, qi: (ni, pi, qi, ki)),
+        ],
+        out_specs=pl.BlockSpec((r, s, c_blk, k_blk),
+                               lambda ki, ci, ni, pi, qi: (0, 0, ci, ki)),
+        out_shape=jax.ShapeDtypeStruct((r, s, c, k), accum_dtype),
+        interpret=interpret,
+    )(xp, do)
+    return out.astype(x.dtype)
+
+
+def _conv2d_wu_whole(x, do, *, stride, padding, r, s, b_p, k_blk,
+                     accum_dtype, interpret):
+    """The pre-refactor kernel: whole padded plane per image in VMEM, C and Q
+    unblocked, grid (K_b, N, P_b).  Working set scales with H*W*C and
+    requires b_p | P."""
+    n, h, wdt, c = x.shape
+    _, p, q, k = do.shape
+    assert p % b_p == 0, (p, b_p)
 
     xp = pad_input(x, padding=padding, stride=stride, rb_p=b_p, r=r, p=p)
     hp, wp = xp.shape[1], xp.shape[2]
@@ -76,8 +195,8 @@ def conv2d_wu(x, do, *, stride: int = 1, padding: int = 0,
     k_b = k // k_blk
     grid = (k_b, n, p_b)   # output tile constant over the (n, p_b) sweep
 
-    kern = functools.partial(_kernel, b_p=b_p, q=q, stride=stride, r=r, s=s,
-                             accum_dtype=accum_dtype)
+    kern = functools.partial(_kernel_whole, b_p=b_p, q=q, stride=stride,
+                             r=r, s=s, accum_dtype=accum_dtype)
     out = pl.pallas_call(
         kern,
         grid=grid,

@@ -157,6 +157,43 @@ def kernel_roofline(*, flops: float, hbm_bytes: float, util: float = 1.0,
     }
 
 
+def composite_roofline(parts: list[dict], *, extra_hbm_bytes: float = 0.0,
+                       step_overhead_s: float = STEP_OVERHEAD_S) -> dict:
+    """Roofline for a *multi-launch* kernel pipeline — e.g. the stride²
+    phase sub-convolutions of the §II-I strided dual, or the dilate plan's
+    single conv plus its materialization pass.
+
+    Each part is a ``repro.tune.measure.conv_traffic`` dict (flops /
+    hbm_bytes / util / n_steps); launches serialize, so the pipeline cost is
+    the sum of per-launch ``kernel_roofline`` costs.  ``extra_hbm_bytes``
+    charges non-kernel HBM traffic the pipeline pays between launches
+    (materializing a dilated dO, re-interleaving phase outputs) at HBM
+    bandwidth — traffic a zero-free plan avoids entirely.
+    """
+    cost = extra_hbm_bytes / HBM_BW
+    flops = 0.0
+    hbm = extra_hbm_bytes
+    steps = 0
+    for t in parts:
+        roof = kernel_roofline(flops=t["flops"], hbm_bytes=t["hbm_bytes"],
+                               util=t.get("util", 1.0),
+                               n_steps=t.get("n_steps", 0),
+                               step_overhead_s=step_overhead_s)
+        cost += roof["cost_s"]
+        flops += t["flops"]
+        hbm += t["hbm_bytes"]
+        steps += t.get("n_steps", 0)
+    ideal = flops / PEAK_FLOPS
+    return {
+        "cost_s": cost,
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "n_steps": steps,
+        "launches": len(parts),
+        "efficiency": ideal / cost if cost > 0 else 0.0,
+    }
+
+
 def cost_analysis_dict(compiled) -> dict:
     """Normalize ``Compiled.cost_analysis()`` across jax versions: older
     releases return a one-element list of dicts, newer ones a flat dict."""

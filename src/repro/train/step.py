@@ -8,6 +8,13 @@ scheduler (see launch/dryrun.py flags) plus optional microbatch gradient
 accumulation (``accum_steps``) which pipelines the dW reduction of
 microbatch i with the compute of i+1 — the paper's §II-J trade-off at
 cluster scale.
+
+``make_cnn_train_step`` / ``warmup_cnn_train`` are the GxM (CNN) siblings:
+the step routes every conv through ``core.conv.conv2d_train``'s custom VJP
+— tiled forward kernel, phase-duality backward-data, band-streamed update
+pass (DESIGN.md §4/§10) — and the warmup pre-tunes the "fwd", "bwd"
+(dual-conv) and "wu" blocking-cache signatures of the whole training graph
+so the first step never tunes inline.
 """
 from __future__ import annotations
 
@@ -57,6 +64,48 @@ def make_train_step(cfg, opt, *, lr: float = 3e-4, clip: float = 1.0,
                      "step": state["step"] + 1}
         return new_state, {"loss": loss, "grad_norm": gnorm}
     return train_step
+
+
+def make_cnn_train_step(gxm, *, lr: float = 0.1, bn_momentum: float = 0.9,
+                        autotune: str | None = None):
+    """Jitted SGD step over a GxM CNN (``graph.executor.GxM``).
+
+    Every conv runs ``conv2d_train``: the forward is the tiled direct
+    kernel, dI comes from the §II-I duality (phase-decomposed for strided
+    layers under the default ``REPRO_BWD_DUALITY=phase`` plan) and dW from
+    the band-streamed §II-J update pass.  ``autotune`` (None = the global
+    knob) scopes the blocking-mode around tracing, so a "cache" step
+    consults what ``warmup_cnn_train`` persisted — never tunes inline.
+    """
+    from repro import backend as be
+
+    jitted = jax.jit(functools.partial(gxm.sgd_train_step,
+                                       bn_momentum=bn_momentum))
+
+    def step(params, batch):
+        if autotune is None:
+            return jitted(params, batch, lr)
+        with be.use_autotune(autotune):
+            return jitted(params, batch, lr)
+    return step
+
+
+def warmup_cnn_train(gxm, *, image_hw=(224, 224), minibatch: int = 1,
+                     mode: str = "tune", backend=None, cache=None,
+                     bwd_mode: str | None = None) -> list[dict]:
+    """Pre-tune every blocking-cache entry one training step of ``gxm``
+    needs: the "fwd" signature of each distinct conv, the "bwd" signatures
+    of its backward-data dual conv(s), and its "wu" update-pass signature —
+    the training analog of serving's ``CnnInferenceEngine.warmup`` (which
+    only covers forward).  Returns the ``tune.warmup_convs`` report."""
+    from repro import tune
+    from repro.graph.serving import conv_shapes, distinct_conv_signatures
+
+    sigs = distinct_conv_signatures(conv_shapes(gxm.etg, image_hw))
+    return tune.warmup_convs(sigs, minibatches=(minibatch,),
+                             kinds=("fwd", "bwd", "wu"), mode=mode,
+                             backend=backend or gxm.impl, cache=cache,
+                             bwd_mode=bwd_mode)
 
 
 def make_prefill_step(cfg, *, cache_len: int, impl=None):

@@ -97,20 +97,27 @@ def autotune_conv(*, h, w, c, k, r, s, stride, padding, dtype_bytes=4,
 
 def warmup_convs(shapes, *, minibatches=(1,), kinds=("fwd",), mode="tune",
                  backend=None, cache: TuneCache | None = None,
-                 dtype_bytes=4) -> list[dict]:
-    """Pre-populate the blocking cache for conv ``shapes`` — the serving
-    warmup entry (DESIGN.md §8).
+                 dtype_bytes=4, bwd_mode=None) -> list[dict]:
+    """Pre-populate the blocking cache for conv ``shapes`` — the serving /
+    training warmup entry (DESIGN.md §8, §10).
 
     ``shapes``: dicts with h/w/c/k/r/s/stride/padding (e.g. from
     ``graph.serving.conv_shapes``).  One entry is tuned per shape × ``kinds``
     × ``minibatches`` — minibatch is part of the cache key, so serving warms
-    exactly the per-device batch of every bucket it will run.  ``mode``
-    follows the knob semantics: "tune" searches+persists on a miss, "cache"
-    only reports what is already there.  All new entries are persisted in one
-    atomic write at the end.  Returns one report dict per key:
-    ``{"key", "cached", "source"}``.
+    exactly the per-device batch of every bucket it will run.  Kinds beyond
+    "fwd" cover the training pass: "wu" keys the update-pass blocking on the
+    layer shape itself; "bwd" expands each layer into the *dual* forward-conv
+    signature(s) its backward-data plan launches
+    (``duality.dual_conv_signatures`` — stride² sub-convs under the default
+    phase plan, selected by ``bwd_mode`` / the ``REPRO_BWD_DUALITY`` knob) so
+    the first training step never tunes inline.  ``mode`` follows the knob
+    semantics: "tune" searches+persists on a miss, "cache" only reports what
+    is already there.  All new entries are persisted in one atomic write at
+    the end.  Returns one report dict per key:
+    ``{"key", "kind", "cached", "source"}``.
     """
     from repro import backend as be
+    from repro.core import duality
     backend = be.resolve(backend)
     cache = default_cache() if cache is None else cache
     report = []
@@ -119,16 +126,26 @@ def warmup_convs(shapes, *, minibatches=(1,), kinds=("fwd",), mode="tune",
                                    "stride", "padding")}
         db = sh.get("dtype_bytes", dtype_bytes)
         for kind in kinds:
-            for mb in minibatches:
-                if mode == "tune":
-                    autotune_conv(**base, dtype_bytes=db, kind=kind,
-                                  backend=backend, minibatch=mb, cache=cache,
-                                  persist=False)
-                key = conv_key(kind=kind, **base, dtype_bytes=db,
-                               backend=backend, minibatch=mb)
-                entry = cache.lookup(key)
-                report.append({"key": key, "cached": entry is not None,
-                               "source": entry["source"] if entry else None})
+            if kind == "bwd":
+                targets = duality.dual_conv_signatures(
+                    r=base["r"], s=base["s"], c=base["c"], k=base["k"],
+                    stride=base["stride"], padding=base["padding"],
+                    input_hw=(base["h"], base["w"]), mode=bwd_mode)
+            else:
+                targets = [base]
+            for tgt in targets:
+                for mb in minibatches:
+                    if mode == "tune":
+                        autotune_conv(**tgt, dtype_bytes=db, kind=kind,
+                                      backend=backend, minibatch=mb,
+                                      cache=cache, persist=False)
+                    key = conv_key(kind=kind, **tgt, dtype_bytes=db,
+                                   backend=backend, minibatch=mb)
+                    entry = cache.lookup(key)
+                    report.append({"key": key, "kind": kind,
+                                   "cached": entry is not None,
+                                   "source": entry["source"] if entry
+                                   else None})
     if mode == "tune" and any(e["cached"] for e in report):
         try:
             cache.save()

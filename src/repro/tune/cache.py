@@ -22,7 +22,9 @@ import tempfile
 import threading
 import time
 
-CACHE_VERSION = 2     # v2: ConvBlocking grew rb_q (RB_Q column blocking)
+CACHE_VERSION = 3     # v3: tiled-wu space (c_blk/rb_q free, ceil-div rb_p)
+                      #     + the "bwd" dual-conv kind
+                      # v2: ConvBlocking grew rb_q (RB_Q column blocking)
 _ENV_VAR = "REPRO_TUNE_CACHE"
 
 

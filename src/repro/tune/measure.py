@@ -67,14 +67,24 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     under blocking `blk` — the inputs of ``launch.roofline.kernel_roofline``.
 
     Traffic terms (all in bytes, summed over the whole launch):
-      * input  — the tiled fwd kernel streams one row band per step (deps:
-        N, P, C_b); ``whole_plane`` ships the padded plane on *every* grid
-        step; wu/streams keep the plane resident per (N, C_b).
+      * input  — the tiled fwd/bwd kernel streams one row band per step
+        (deps: N, P, C_b); ``whole_plane`` ships the padded plane on *every*
+        grid step; streams keeps the plane resident per (N, C_b).
       * weight — one (r, s, C_blk, K_blk) block, resident across the P sweep
         when the loop order allows (§II-C).
       * output — one f32 tile per (N, K_b, P_b) visit; when C is blocked
         (tiled fwd with c_blk < C, or streams) every extra accumulation pass
         re-reads and rewrites the tile: the multi-pass output term.
+
+    ``kind="wu"`` models the update pass instead: the tiled kernel streams
+    an input row band *and* a dO pixel tile on every step of its
+    ``(K_b, C_b, N, P_b, Q_b)`` grid and writes each (r, s, C_blk, K_blk)
+    f32 dW tile exactly once (the accumulation revisits stay in VMEM); the
+    legacy ``whole_plane`` variant keeps the entire padded plane resident
+    across the P sweep (its block index is constant over P_b, so Pallas
+    re-fetches per (k, n)) — but that residency is exactly why it cannot
+    schedule once the plane approaches the VMEM budget, the §II-J
+    regression the tiling removes.
     """
     h, w, c, k = shape["h"], shape["w"], shape["c"], shape["k"]
     r, s = shape["r"], shape["s"]
@@ -83,9 +93,15 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     p = out_dim(h, r, stride, padding)
     q = out_dim(w, s, stride, padding)
     n = minibatch
+    hp, wp = h + 2 * padding + r, w + 2 * padding
 
-    tiled_fwd = kind == "fwd" and not whole_plane
-    if kind == "wu" or whole_plane:
+    if kind == "wu":
+        return _wu_traffic(h=h, w=w, c=c, k=k, r=r, s=s, stride=stride,
+                           p=p, q=q, hp=hp, wp=wp, n=n, blk=blk,
+                           dtype_bytes=dtype_bytes, whole_plane=whole_plane)
+
+    tiled_fwd = kind in ("fwd", "bwd") and not whole_plane
+    if whole_plane:
         c_blk, rb_q = c, q
     elif kind == "streams":
         c_blk, rb_q = blk.c_blk, q
@@ -99,8 +115,8 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     c_b = max(c // c_blk, 1)
     extents = (n, k_b, p_b * q_b, c_b)
 
-    # the wu kernel and the legacy whole-plane fwd have a fixed grid order
-    order = "nkpc" if (kind == "wu" or whole_plane) else blk.order
+    # the legacy whole-plane fwd has a fixed grid order
+    order = "nkpc" if whole_plane else blk.order
     pos = {dim: i for i, dim in enumerate(order)}
     by_dim = {"n": extents[0], "k": extents[1], "p": extents[2],
               "c": extents[3]}
@@ -112,7 +128,6 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     util = (_tile_util(rb_p * rb_q) * _tile_util(blk.k_blk)
             * _tile_util(c_blk))
 
-    hp, wp = h + 2 * padding + r, w + 2 * padding
     if tiled_fwd:
         band_h = (rb_p - 1) * stride + r
         band_w = (rb_q - 1) * stride + s
@@ -151,6 +166,52 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     }
 
 
+def _wu_traffic(*, h, w, c, k, r, s, stride, p, q, hp, wp, n, blk,
+                dtype_bytes, whole_plane) -> dict:
+    """Update-pass traffic: see ``conv_traffic``.  The GEMM per step is
+    dW[r,s] += X^T @ dO with M=C_blk, N=K_blk, K=pixel-block, so occupancy
+    is (c_blk, k_blk, rb_p*rb_q)-tiled."""
+    flops = 2.0 * n * p * q * c * k * r * s
+    k_blk = min(blk.k_blk, k)
+    if whole_plane:
+        rb_p = min(blk.rb_p, p)
+        p_b = math.ceil(p / rb_p)
+        n_steps = (k // k_blk) * n * p_b                  # (K_b, N, P_b)
+        util = _tile_util(c) * _tile_util(k_blk) * _tile_util(rb_p * q)
+        # the plane's block index is constant over the P_b sweep: fetched
+        # once per (k, n), resident (in VMEM, or nowhere at all) in between
+        x_traffic = hp * wp * c * dtype_bytes * (k // k_blk) * n
+        do_traffic = rb_p * q * k_blk * dtype_bytes * n_steps
+    else:
+        rb_p = min(blk.rb_p, p)
+        rb_q = min(blk.rb_q or q, q)
+        c_blk = blk.c_blk or c
+        band_h = (rb_p - 1) * stride + r
+        band_w = (rb_q - 1) * stride + s
+        p_b = math.ceil(p / rb_p)
+        q_b = math.ceil(q / rb_q)
+        n_steps = (k // k_blk) * (c // c_blk) * n * p_b * q_b
+        util = _tile_util(c_blk) * _tile_util(k_blk) * _tile_util(rb_p * rb_q)
+        # band + dO tile are re-streamed on every step ((n, p, q) are the
+        # innermost grid axes; each C-block pass re-reads the dO tiles)
+        x_traffic = band_h * band_w * c_blk * dtype_bytes * n_steps
+        do_traffic = rb_p * rb_q * k_blk * dtype_bytes * n_steps
+    # each (r, s, C_blk, K_blk) f32 tile is written exactly once — the
+    # (n, p, q) accumulation revisits never leave VMEM
+    dw_traffic = r * s * c * k * 4
+    total = x_traffic + do_traffic + dw_traffic
+    return {
+        "flops": flops,
+        "util": util,
+        "x_bytes": x_traffic,
+        "w_bytes": do_traffic,      # the "weight slot" input is dO here
+        "o_bytes": dw_traffic,
+        "hbm_bytes": total,
+        "n_steps": n_steps,
+        "extents": (n, k // k_blk, p_b, 1 if whole_plane else c // (blk.c_blk or c)),
+    }
+
+
 def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
                  kind: str = "fwd", whole_plane: bool = False) -> float:
     """Modeled microseconds for one conv of `shape` under blocking `blk`."""
@@ -159,6 +220,63 @@ def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     roof = kernel_roofline(flops=t["flops"], hbm_bytes=t["hbm_bytes"],
                            util=t["util"], n_steps=0)
     return roof["step_time_s"] * 1e6 + t["n_steps"] * STEP_OVERHEAD_US
+
+
+def bwd_data_traffic(shape: dict, *, minibatch: int = 1,
+                     mode: str = "phase") -> dict:
+    """Modeled traffic of the whole §II-I backward-data pipeline of `shape`
+    under duality plan ``mode`` ("phase" | "dilate").
+
+    Returns the per-launch ``conv_traffic`` dicts of every dual forward conv
+    the plan runs (``duality.dual_conv_signatures`` with ``unique=False`` —
+    one for the single-conv scenarios, one per non-empty phase for the phase
+    plan, duplicates included: identical-geometry phases are still separate
+    launches) plus ``extra_hbm_bytes``: the
+    non-kernel HBM traffic the plan pays outside the conv launches —
+    materializing the dilated dO (write + source read) for "dilate",
+    re-interleaving the stride×stride dI subgrids for "phase".  Feed the
+    result to ``launch.roofline.composite_roofline``.
+    """
+    from repro.core import duality
+    from repro.core.blocking import conv_blocking_analytic
+
+    h, w, c, k = shape["h"], shape["w"], shape["c"], shape["k"]
+    r, s = shape["r"], shape["s"]
+    stride, padding = shape["stride"], shape["padding"]
+    dtype_bytes = shape.get("dtype_bytes", 4)
+    p = out_dim(h, r, stride, padding)
+    q = out_dim(w, s, stride, padding)
+    sigs = duality.dual_conv_signatures(r=r, s=s, c=c, k=k, stride=stride,
+                                        padding=padding, input_hw=(h, w),
+                                        mode=mode, unique=False)
+    parts = []
+    for sg in sigs:
+        blk = conv_blocking_analytic(
+            h=sg["h"], w=sg["w"], c=sg["c"], k=sg["k"], r=sg["r"], s=sg["s"],
+            stride=sg["stride"], padding=sg["padding"],
+            dtype_bytes=dtype_bytes, kind="bwd")
+        parts.append(conv_traffic(sg, blk, minibatch=minibatch, kind="bwd"))
+    extra = 0.0
+    generic = stride > 1 and not (r == 1 and s == 1)
+    if generic and mode == "dilate":
+        # write the (stride²-sparse) dilated+padded plane, read dO to fill it
+        sg = sigs[0]
+        extra = (sg["h"] * sg["w"] + p * q) * k * dtype_bytes * minibatch
+    elif generic and mode == "phase":
+        # interleave: read each phase output once, write dI once
+        extra = 2.0 * h * w * c * dtype_bytes * minibatch
+    return {"parts": parts, "extra_hbm_bytes": extra,
+            "n_convs": len(parts), "mode": mode}
+
+
+def bwd_data_cost_us(shape: dict, *, minibatch: int = 1,
+                     mode: str = "phase") -> float:
+    """Modeled microseconds for the full backward-data pipeline of `shape`."""
+    from repro.launch.roofline import composite_roofline
+    t = bwd_data_traffic(shape, minibatch=minibatch, mode=mode)
+    roof = composite_roofline(t["parts"],
+                              extra_hbm_bytes=t["extra_hbm_bytes"])
+    return roof["cost_s"] * 1e6
 
 
 def matmul_cost_us(m: int, n: int, k: int, blk: MatmulBlocking, *,
@@ -220,9 +338,10 @@ def measure_conv_us(shape: dict, blk: ConvBlocking, *, kind: str = "fwd",
                          jnp.float32)
         fn = jax.jit(lambda x, do: conv2d_wu(
             x, do, stride=stride, padding=padding, filter_rs=(r, s),
-            b_p=blk.rb_p, k_blk=blk.k_blk))
+            b_p=blk.rb_p, k_blk=blk.k_blk, c_blk=blk.c_blk, rb_q=blk.rb_q,
+            whole_plane=False))
         wt = do
-    else:
+    else:                       # "fwd" and "bwd" (the dual IS a fwd launch)
         fn = jax.jit(lambda x, wt: conv2d_direct(
             x, wt, stride=stride, padding=padding, rb_p=blk.rb_p,
             k_blk=blk.k_blk, c_blk=blk.c_blk, rb_q=blk.rb_q,

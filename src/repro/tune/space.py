@@ -4,7 +4,7 @@ For a conv layer the tunable coordinates are exactly the knobs the Pallas
 kernels expose:
 
   rb_p   output rows per microkernel (paper RB_P; MXU M-tile = rb_p*rb_q)
-  rb_q   output cols per microkernel (paper RB_Q; fwd only, 0/q = full row)
+  rb_q   output cols per microkernel (paper RB_Q; fwd/bwd/wu, 0/q = full row)
   k_blk  output-feature block (paper K_b; MXU N-tile, must divide K)
   c_blk  input-feature block (paper C_b accumulation; must divide C)
   order  grid/dryrun loop order over (N, K_b, P_b, C_b) (paper §II-C)
@@ -16,7 +16,14 @@ do worse than.  Kinds:
 
   "fwd"     conv2d_direct tiled forward: all five coordinates free (C-block
             accumulation + RB_Q column blocking + grid loop order)
-  "wu"      conv2d_wu update pass: rb_p must divide P; whole-plane
+  "bwd"     the backward-data dual conv — the same tiled forward kernel run
+            on the transformed (dO, W') problem, so the same five coordinates
+            are free; a separate kind so dual-shape winners get their own
+            cache namespace (shapes come from ``duality.dual_conv_signatures``)
+  "wu"      conv2d_wu band-streamed update pass: rb_p ceil-div (tails are
+            masked in-kernel, no divisor constraint), c_blk / rb_q free; the
+            grid order is fixed (K_b, C_b, N, P_b, Q_b), so order is not a
+            coordinate
   "streams" conv2d_streams: rb_p/k_blk/c_blk/order free; whole-plane
 """
 from __future__ import annotations
@@ -69,30 +76,31 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
                     kind: str = "fwd",
                     vmem_budget: int = VMEM_BUDGET) -> list[ConvBlocking]:
     """Feasible blockings, analytic seed first, deduplicated, budget-capped."""
-    assert kind in ("fwd", "wu", "streams"), kind
+    assert kind in ("fwd", "bwd", "wu", "streams"), kind
     p = out_dim(h, r, stride, padding)
     q = out_dim(w, s, stride, padding)
-    whole = kind != "fwd"           # wu/streams keep the plane resident
+    whole = kind == "streams"       # only streams keeps the plane resident
     seed = conv_blocking_analytic(
         h=h, w=w, c=c, k=k, r=r, s=s, stride=stride, padding=padding,
         dtype_bytes=dtype_bytes, vmem_budget=vmem_budget,
-        require_divisor=(kind == "wu"), whole_plane=whole)
+        whole_plane=(True if whole else None), kind=kind)
 
     k_blocks = _feature_blocks(k)
     if kind == "wu":
-        c_blocks = [c]
+        # band-streamed update pass: c_blk / rb_q free, grid order fixed
+        c_blocks = sorted({c} | set(_feature_blocks(c)), reverse=True)
         orders = (seed.order,)
-        rb_qs = [q]
+        rb_qs = _rb_q_candidates(max(q, 1))
     elif kind == "streams":
         c_blocks = _feature_blocks(c)
         orders = ORDERS
         rb_qs = [q]
     else:
-        # fwd: full-C single-pass first, then lane-aligned C_b accumulation
+        # fwd/bwd: full-C single-pass first, then lane-aligned C_b accumulation
         c_blocks = sorted({c} | set(_feature_blocks(c)), reverse=True)
         orders = ORDERS
         rb_qs = _rb_q_candidates(max(q, 1))
-    rbs = _rb_candidates(max(p, 1), require_divisor=(kind == "wu"))
+    rbs = _rb_candidates(max(p, 1), require_divisor=False)
 
     pool: list[ConvBlocking] = []
     seen = {(seed.rb_p, seed.k_blk, seed.c_blk, seed.order,
@@ -105,7 +113,8 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
                         h=h, w=w, c=c, k_blk=kb, r=r, s=s, q=q, rb_p=rb,
                         padding=padding, dtype_bytes=dtype_bytes,
                         stride=stride, c_blk=cb, rb_q=rq,
-                        whole_plane=whole)
+                        whole_plane=whole,
+                        kind="wu" if kind == "wu" else "fwd")
                     if ws > vmem_budget:
                         continue
                     for order in orders:

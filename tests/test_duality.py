@@ -1,14 +1,17 @@
 """Backward-by-duality (§II-I/J): the custom-VJP training conv must match
 jax autodiff of the reference conv for every scenario, on both the xla and
-interpret (Pallas) backends."""
+interpret (Pallas) backends; the phase-decomposed strided plan (zero-free)
+must agree with the legacy dilate plan and must never materialize a dilated
+dO on the default path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro import backend as be
 from repro.core import duality
-from repro.core.conv import conv2d_train
+from repro.core.conv import conv2d_bwd_data_via_fwd, conv2d_train
 from repro.kernels import ref
 
 SCENARIOS = [
@@ -18,6 +21,8 @@ SCENARIOS = [
     (16, 8, 8, 3, 2, 1, "generic"),
     (9, 8, 8, 3, 2, 1, "generic_odd"),
     (11, 8, 8, 5, 3, 2, "generic_aggressive"),
+    (24, 8, 16, 7, 2, 3, "stem_7x7_s2"),
+    (13, 24, 40, 3, 2, 1, "nondivisor_pck_tails"),
 ]
 
 
@@ -42,6 +47,27 @@ def test_custom_vjp_matches_autodiff(rng, impl, case):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("impl", ["xla", "interpret"])
+def test_custom_vjp_matches_autodiff_dilate_plan(rng, impl):
+    """The A/B baseline plan (REPRO_BWD_DUALITY=dilate) stays a correct
+    training path for the generic strided scenario."""
+    h, c, k, r, stride, pad = 16, 8, 8, 3, 2, 1
+    x = jnp.asarray(rng.standard_normal((1, h, h, c)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1, jnp.float32)
+
+    def loss_kernel(x, w):
+        return jnp.sum(conv2d_train(x, w, stride, pad, impl) ** 2)
+
+    def loss_ref(x, w):
+        return jnp.sum(ref.conv2d(x, w, stride=stride, padding=pad) ** 2)
+
+    with be.use_bwd_duality("dilate"):
+        gx = jax.grad(loss_kernel)(x, w)
+    ex = jax.grad(loss_ref)(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(ex),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_weight_transform_involution(rng):
     """W'' == W: the duality transform is its own inverse."""
     w = jnp.asarray(rng.standard_normal((3, 3, 8, 16)), jnp.float32)
@@ -54,8 +80,99 @@ def test_bwd_plan_scenarios():
                                  input_hw=(8, 8))[0] == "stride1"
     assert duality.bwd_data_plan(r=1, s=1, stride=2, padding=0,
                                  input_hw=(8, 8))[0] == "1x1"
+    # generic: "phase" by default, "dilate" via the knob / explicit mode
     assert duality.bwd_data_plan(r=3, s=3, stride=2, padding=1,
-                                 input_hw=(8, 8))[0] == "generic"
+                                 input_hw=(8, 8))[0] == "phase"
+    assert duality.bwd_data_plan(r=3, s=3, stride=2, padding=1,
+                                 input_hw=(8, 8), mode="dilate")[0] == "dilate"
+    with be.use_bwd_duality("dilate"):
+        assert duality.bwd_data_plan(r=3, s=3, stride=2, padding=1,
+                                     input_hw=(8, 8))[0] == "dilate"
+
+
+def test_dilate_is_single_lax_pad(rng):
+    """The dilate baseline builds the stride-dilated tensor with one
+    scatter-free lax.pad — same values as the seed's zeros+scatter."""
+    x = jnp.asarray(rng.standard_normal((2, 3, 4, 8)), jnp.float32)
+    for stride in (1, 2, 3):
+        got = duality.dilate(x, stride)
+        n, p, q, k = x.shape
+        exp = np.zeros((n, (p - 1) * stride + 1, (q - 1) * stride + 1, k),
+                       np.float32)
+        exp[:, ::stride, ::stride, :] = np.asarray(x)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+    jaxpr = str(jax.make_jaxpr(lambda x: duality.dilate(x, 2))(x))
+    assert "scatter" not in jaxpr and "pad" in jaxpr
+
+
+@pytest.mark.parametrize("case", [c for c in SCENARIOS],
+                         ids=[c[-1] for c in SCENARIOS])
+def test_phase_matches_dilate_every_scenario(rng, case):
+    """Phase-decomposition vs dilate duality: bit-exact on the Pallas
+    (interpret) kernel path for every bwd_data_plan scenario — the
+    single-conv scenarios trivially (same launch), the generic ones because
+    the phase sub-convs accumulate the same taps in the same f32 chain."""
+    h, c, k, r, stride, pad, _ = case
+    p = (h + 2 * pad - r) // stride + 1
+    do = jnp.asarray(rng.standard_normal((2, p, p, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1, jnp.float32)
+    kw = dict(stride=stride, padding=pad, input_hw=(h, h))
+    ph = conv2d_bwd_data_via_fwd(do, w, **kw, impl="interpret", mode="phase")
+    di = conv2d_bwd_data_via_fwd(do, w, **kw, impl="interpret", mode="dilate")
+    np.testing.assert_array_equal(np.asarray(ph), np.asarray(di))
+    exp = ref.conv2d_bwd_data(do, w, stride=stride, padding=pad,
+                              input_hw=(h, h))
+    np.testing.assert_allclose(np.asarray(ph), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_phase_plan_never_dilates(monkeypatch):
+    """Acceptance: stride=2 backward-data on the default path allocates no
+    dilated dO — duality.dilate must never run."""
+    def boom(x, stride):
+        raise AssertionError("dilate() materialized on the phase path")
+    monkeypatch.setattr(duality, "dilate", boom)
+    rng = np.random.default_rng(0)
+    do = jnp.asarray(rng.standard_normal((1, 8, 8, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) * 0.1, jnp.float32)
+    out = conv2d_bwd_data_via_fwd(do, w, stride=2, padding=1,
+                                  input_hw=(16, 16), impl="xla")
+    assert out.shape == (1, 16, 16, 8)
+
+
+def test_phase_plan_covers_taps():
+    """Every filter tap lands in exactly one phase sub-conv, and the dual
+    signatures mirror the padded dO planes the runtime launches."""
+    for (r, s, stride, pad, h) in ((3, 3, 2, 1, 16), (7, 7, 2, 3, 24),
+                                   (5, 5, 3, 2, 11), (3, 3, 4, 1, 10)):
+        plans = duality.phase_plan(r=r, s=s, stride=stride, padding=pad,
+                                   input_hw=(h, h),
+                                   out_hw=((h + 2 * pad - r) // stride + 1,) * 2)
+        assert len(plans) == stride * stride
+        assert sum(ay.taps * ax.taps for ay, ax in plans) == r * s
+        # every dI row is owned by exactly one phase
+        assert sum(ay.count for ay, ax in plans if ax.res == 0) == h
+        sigs = duality.dual_conv_signatures(r=r, s=s, c=8, k=16,
+                                            stride=stride, padding=pad,
+                                            input_hw=(h, h), mode="phase")
+        assert all(sg["stride"] == 1 and sg["c"] == 16 and sg["k"] == 8
+                   for sg in sigs)
+
+
+def test_dual_signatures_single_conv_scenarios():
+    # stride1: one dual conv over the (p, q) plane with swapped C/K
+    (sg,) = duality.dual_conv_signatures(r=3, s=3, c=8, k=16, stride=1,
+                                         padding=1, input_hw=(8, 8))
+    assert sg == dict(h=8, w=8, c=16, k=8, r=3, s=3, stride=1, padding=1)
+    # 1x1 strided
+    (sg,) = duality.dual_conv_signatures(r=1, s=1, c=8, k=16, stride=2,
+                                         padding=0, input_hw=(8, 8))
+    assert sg == dict(h=4, w=4, c=16, k=8, r=1, s=1, stride=1, padding=0)
+    # dilate mode: one conv over the dilated+padded plane
+    (sg,) = duality.dual_conv_signatures(r=3, s=3, c=8, k=16, stride=2,
+                                         padding=1, input_hw=(16, 16),
+                                         mode="dilate")
+    assert sg["h"] > 13 and sg["r"] == 3 and sg["stride"] == 1
 
 
 @settings(max_examples=15, deadline=None)

@@ -216,6 +216,90 @@ def test_resnet_stem_tiled_regression(rng):
                                rtol=1e-3, atol=1e-3)
 
 
+# -- tiled update pass (band streaming, C/Q blocking, ceil-div tails) --------
+
+TILED_WU_CASES = [
+    # n, h, w, c, k, r, stride, pad, b_p, rb_q, c_blk
+    (2, 8, 8, 16, 16, 3, 1, 1, 4, None, 8),    # C_b accumulation
+    (2, 9, 9, 8, 16, 3, 1, 1, 4, 4, 8),        # P and Q ceil-div tails
+    (1, 16, 16, 16, 8, 3, 2, 1, 3, 5, 8),      # stride 2 + non-divisor tails
+    (1, 12, 12, 8, 8, 5, 1, 2, 5, 6, None),    # 5x5 halo + tails
+    (1, 24, 24, 8, 16, 7, 2, 3, 4, 6, 8),      # 7x7 stride-2 halo
+    (1, 14, 14, 16, 32, 1, 1, 0, 7, 5, 8),     # 1x1, every axis free
+]
+
+
+@pytest.mark.parametrize("case", TILED_WU_CASES)
+def test_conv2d_wu_tiled_blocking_sweep(rng, case):
+    """The band-streamed update pass: every freed axis — c_blk, rb_q, and
+    ceil-div P/Q tails (masked in-kernel) — stays correct vs the VJP
+    oracle.  No divisibility of P is required any more."""
+    n, h, w, c, k, r, stride, pad, bp, rq, cb = case
+    x, _ = _data(rng, n, h, w, c, k, r)
+    p = (h + 2 * pad - r) // stride + 1
+    do = jnp.asarray(rng.standard_normal((n, p, p, k)), jnp.float32)
+    out = conv2d_wu(x, do, stride=stride, padding=pad, filter_rs=(r, r),
+                    b_p=bp, rb_q=rq, c_blk=cb, whole_plane=False,
+                    interpret=True)
+    exp = ref.conv2d_bwd_weights(x, do, stride=stride, padding=pad,
+                                 filter_rs=(r, r))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_wu_whole_plane_legacy_path(rng):
+    """The A/B knob: on a divisor-friendly layer the legacy resident-plane
+    update kernel must agree bit-for-bit with the tiled default."""
+    x, _ = _data(rng, 2, 8, 8, 8, 16, 3)
+    do = jnp.asarray(rng.standard_normal((2, 8, 8, 16)), jnp.float32)
+    kw = dict(stride=1, padding=1, filter_rs=(3, 3), b_p=4, interpret=True)
+    tiled = conv2d_wu(x, do, whole_plane=False, **kw)
+    whole = conv2d_wu(x, do, whole_plane=True, **kw)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(whole))
+
+
+def test_wu_stem_tiled_regression(rng):
+    """The training-pass acceptance bar: the update pass of the 224x224 7x7
+    stride-2 stem — un-schedulable for the legacy resident-plane kernel
+    under a 1 MiB budget, and P=112 has awkward divisors — runs band-
+    streamed with a working set independent of H*W."""
+    sh = STEM_CONV
+    p = out_dim(sh["h"], sh["r"], sh["stride"], sh["padding"])
+    blk = conv_blocking_analytic(
+        h=sh["h"], w=sh["w"], c=sh["c"], k=sh["k"], r=sh["r"], s=sh["s"],
+        stride=sh["stride"], padding=sh["padding"], kind="wu")
+
+    def ws(shape, whole):
+        q = out_dim(shape["w"], shape["s"], shape["stride"],
+                    shape["padding"])
+        return conv_working_set(
+            h=shape["h"], w=shape["w"], c=shape["c"], k_blk=blk.k_blk,
+            r=shape["r"], s=shape["s"], q=q, rb_p=blk.rb_p,
+            padding=shape["padding"], stride=shape["stride"],
+            c_blk=None if whole else blk.c_blk,
+            rb_q=None if whole else 16, whole_plane=whole, kind="wu")
+
+    small_budget = 1 << 20            # the CI training-pass smoke budget
+    assert ws(STEM_CONV, whole=True) > small_budget        # legacy: too big
+    assert ws(STEM_CONV, whole=False) <= small_budget      # tiled: fits
+    # tiled working set is independent of the image size (same band)
+    assert ws(STEM_CONV, whole=False) == ws(STEM_CONV_HALF, whole=False)
+    assert ws(STEM_CONV_HALF, whole=True) < ws(STEM_CONV, whole=True)
+
+    x, _ = _data(rng, sh["n"], sh["h"], sh["w"], sh["c"], sh["k"], sh["r"])
+    do = jnp.asarray(rng.standard_normal((sh["n"], p, p, sh["k"])),
+                     jnp.float32)
+    out = conv2d_wu(x, do, stride=sh["stride"], padding=sh["padding"],
+                    filter_rs=(sh["r"], sh["s"]), b_p=blk.rb_p, rb_q=16,
+                    c_blk=sh["c"], whole_plane=False, interpret=True)
+    exp = ref.conv2d_bwd_weights(x, do, stride=sh["stride"],
+                                 padding=sh["padding"],
+                                 filter_rs=(sh["r"], sh["s"]))
+    assert out.shape == (7, 7, sh["c"], sh["k"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-2, atol=1e-2)
+
+
 def test_pad_input_no_overpad_stride2():
     """pad_input must stop at the last row/col the grid can touch: for
     stride > 1 the symmetric bottom pad used to inflate the plane past it."""

@@ -1,0 +1,112 @@
+"""CNN training path over GxM: the jitted SGD step routes every conv
+through conv2d_train's custom VJP (tiled fwd, phase-duality dI,
+band-streamed dW), and training warmup pre-tunes the fwd + bwd (dual) + wu
+blocking-cache signatures so the first step never tunes inline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backend as be
+from repro import tune
+from repro.core.duality import dual_conv_signatures
+from repro.graph import GxM, resnet50
+from repro.graph.serving import conv_shapes, distinct_conv_signatures
+from repro.train.step import make_cnn_train_step, warmup_cnn_train
+from repro.tune.cache import TuneCache, conv_key
+
+
+def _tiny(num_classes=10):
+    nl = resnet50(num_classes=num_classes, stages=(1, 1, 1, 1))
+    m = GxM(nl, num_classes=num_classes)
+    params = m.init(jax.random.PRNGKey(0))
+    return m, params
+
+
+def _batch(rng, n=2, hw=32, num_classes=10):
+    return {
+        "image": jnp.asarray(rng.standard_normal((n, hw, hw, 3)),
+                             jnp.float32),
+        "label": jnp.asarray(rng.integers(0, num_classes, size=(n,))),
+    }
+
+
+def test_cnn_train_step_runs_and_updates(rng):
+    m, params = _tiny()
+    w0 = np.asarray(params["conv1"]["w"]).copy()
+    step = make_cnn_train_step(m, lr=0.01)
+    batch = _batch(rng)
+    losses = []
+    for _ in range(3):
+        params, loss = step(params, batch)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    # gradients flowed through every conv's custom VJP
+    assert np.abs(np.asarray(params["conv1"]["w"]) - w0).max() > 0
+    # BN running stats (fused into the conv params) update outside the
+    # gradient path
+    assert np.abs(np.asarray(params["conv1"]["mean"])).max() > 0
+
+
+def test_cnn_train_step_matches_plain_sgd(rng):
+    """The builder is a routing wrapper: one step must equal the raw
+    gxm.sgd_train_step numerics."""
+    m, params = _tiny()
+    batch = _batch(rng)
+    step = make_cnn_train_step(m, lr=0.1)
+    got, loss_got = step(params, batch)
+    exp, loss_exp = m.sgd_train_step(params, batch, 0.1)
+    np.testing.assert_allclose(float(loss_got), float(loss_exp), rtol=1e-5)
+    for name in got:
+        for k in got[name]:
+            np.testing.assert_allclose(np.asarray(got[name][k]),
+                                       np.asarray(exp[name][k]),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_warmup_cnn_train_covers_bwd_and_wu(tmp_path, monkeypatch):
+    """Training warmup must populate, per conv signature, the fwd key, the
+    wu key, and every dual-conv bwd key its backward-data plan launches —
+    the keys the first training step will look up."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "train.json"))
+    m, _ = _tiny()
+    cache = TuneCache(str(tmp_path / "train.json"))
+    report = warmup_cnn_train(m, image_hw=(32, 32), minibatch=2,
+                              backend="interpret", cache=cache)
+    kinds = {e["kind"] for e in report}
+    assert kinds == {"fwd", "bwd", "wu"}
+    assert all(e["cached"] for e in report)
+
+    sigs = distinct_conv_signatures(conv_shapes(m.etg, (32, 32)))
+    assert len(sigs) >= 5
+    for sg in sigs:
+        for kind in ("fwd", "wu"):
+            key = conv_key(kind=kind, **sg, dtype_bytes=4,
+                           backend="interpret", minibatch=2)
+            assert cache.lookup(key) is not None, (kind, sg)
+        for dual in dual_conv_signatures(
+                r=sg["r"], s=sg["s"], c=sg["c"], k=sg["k"],
+                stride=sg["stride"], padding=sg["padding"],
+                input_hw=(sg["h"], sg["w"])):
+            key = conv_key(kind="bwd", **dual, dtype_bytes=4,
+                           backend="interpret", minibatch=2)
+            assert cache.lookup(key) is not None, (sg, dual)
+
+
+def test_train_step_consults_warmed_cache(tmp_path, monkeypatch, rng):
+    """An autotune="cache" training step after warmup must produce the same
+    result as the analytic path up to f32 accumulation order (tuned
+    blockings are a pure perf knob — they reorder the C/pixel accumulation
+    chains, nothing else)."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "c.json"))
+    m, params = _tiny()
+    batch = _batch(rng)
+    with be.use_backend("interpret"):
+        base, loss_base = m.sgd_train_step(params, batch, 0.1)
+        warmup_cnn_train(m, image_hw=(32, 32), minibatch=2,
+                         backend="interpret")
+        step = make_cnn_train_step(m, lr=0.1, autotune="cache")
+        got, loss_got = step(params, batch)
+    np.testing.assert_allclose(float(loss_got), float(loss_base), rtol=1e-4)
+    w_base = np.asarray(base["conv1"]["w"])
+    np.testing.assert_allclose(np.asarray(got["conv1"]["w"]), w_base,
+                               rtol=5e-2, atol=5e-3)

@@ -131,11 +131,34 @@ def test_candidates_respect_constraints():
         assert b.order in tune.space.ORDERS
 
 
-def test_wu_candidates_divide_p():
+def test_wu_candidates_free_cblk_rbq_and_tails():
+    """The tiled update pass freed the wu space: rb_p is ceil-div (tails are
+    masked in-kernel, so non-divisors of P are legal candidates) and
+    c_blk / rb_q are search coordinates — all within the VMEM budget under
+    the band-based wu residency model."""
+    p = 14
     cands = tune.conv_candidates(h=14, w=14, c=256, k=256, r=3, s=3,
                                  stride=1, padding=1, kind="wu")
-    p = 14
-    assert all(p % b.rb_p == 0 for b in cands)
+    assert any(p % b.rb_p for b in cands)               # non-divisor rb_p
+    assert len({b.c_blk for b in cands}) > 1            # C_b freed
+    assert len({b.rb_q or p for b in cands}) > 1        # RB_Q freed
+    from repro.core.blocking import conv_working_set
+    for b in cands:
+        assert 256 % b.c_blk == 0 and 256 % b.k_blk == 0
+        ws = conv_working_set(h=14, w=14, c=256, k_blk=b.k_blk, r=3, s=3,
+                              q=p, rb_p=b.rb_p, padding=1, c_blk=b.c_blk,
+                              rb_q=b.rb_q, kind="wu")
+        assert ws <= VMEM_BUDGET
+
+
+def test_bwd_kind_candidates_and_key_namespace():
+    """Kind "bwd" (the dual forward conv) searches the fwd space but keys a
+    separate cache namespace."""
+    kw = dict(h=14, w=14, c=256, k=64, r=3, s=3, stride=1, padding=2)
+    cands = tune.conv_candidates(**kw, kind="bwd")
+    assert cands[0] == conv_blocking_analytic(**kw)     # fwd-model seed
+    assert tune.conv_key(kind="bwd", **kw, dtype_bytes=4, backend="xla") \
+        != tune.conv_key(kind="fwd", **kw, dtype_bytes=4, backend="xla")
 
 
 def test_cost_model_orders_by_occupancy():
