@@ -13,6 +13,9 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   §II-H            -> streams_bench         (dryrun/segments accounting)
   §II-D            -> autotune_bench        (tuned vs heuristic blocking)
   §III serving     -> serve_cnn_bench       (images/sec × batch × devices)
+  §III multi-node  -> train_scaling_bench   (DP training: devices × psum
+                                             wire format ->
+                                             BENCH_train_scaling.json)
   DESIGN.md §7     -> moe_streams_bench     (streams GMM vs dense loop)
   beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
 
@@ -30,7 +33,7 @@ from benchmarks import (autotune_bench, bwd_wu_layers, conv_fwd_bench,
                         fusion_bench, inception_bench, lm_roofline_table,
                         moe_streams_bench, reduced_precision_bench,
                         resnet50_layers, scaling_bench, serve_cnn_bench,
-                        streams_bench)
+                        streams_bench, train_scaling_bench)
 
 MODULES = [
     ("conv_fwd_bench", conv_fwd_bench),
@@ -45,6 +48,7 @@ MODULES = [
     ("lm_roofline_table", lm_roofline_table),
     ("autotune_bench", autotune_bench),
     ("serve_cnn_bench", serve_cnn_bench),
+    ("train_scaling_bench", train_scaling_bench),
 ]
 
 
@@ -75,7 +79,10 @@ def main(argv=None) -> None:
                            ("conv_fwd_bench",
                             lambda: conv_fwd_bench.main([])),
                            ("bwd_wu_layers",
-                            lambda: bwd_wu_layers.main([]))):
+                            lambda: bwd_wu_layers.main([])),
+                           # model-based: refreshes BENCH_train_scaling.json
+                           ("train_scaling_bench",
+                            lambda: train_scaling_bench.main([]))):
             try:
                 call()
             except Exception:  # noqa: BLE001

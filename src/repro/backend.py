@@ -30,6 +30,13 @@ selects how the generic §II-I duality case runs: "phase" (default)
 decomposes into stride² forward sub-convs over the *undilated* dO — no
 intermediate tensor, no multiply-by-zero work; "dilate" is the legacy
 materialize-the-dilated-dO plan kept for A/B.  See DESIGN.md §10.
+
+The data-parallel gradient reduction (``REPRO_GRAD_COMPRESS``
+/ ``set_grad_compress``) selects the wire format of the cross-shard psum in
+the DP CNN train step: "off" (default) reduces f32 gradients exactly;
+"int8" routes every leaf through ``optim.compress.compressed_psum`` —
+error-feedback int8 quantization, 1/4 the all-reduce bytes, residual
+carried in the train state.  See DESIGN.md §11.
 """
 from __future__ import annotations
 
@@ -40,10 +47,18 @@ _VALID = ("pallas", "interpret", "xla")
 _VALID_AUTOTUNE = ("off", "cache", "tune")
 _VALID_CONV_TILING = ("tiled", "whole")
 _VALID_BWD_DUALITY = ("phase", "dilate")
+_VALID_GRAD_COMPRESS = ("off", "int8")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
 _autotune = os.environ.get("REPRO_AUTOTUNE", "off")
 _conv_tiling = os.environ.get("REPRO_CONV_TILING", "tiled")
 _bwd_duality = os.environ.get("REPRO_BWD_DUALITY", "phase")
+_grad_compress = os.environ.get("REPRO_GRAD_COMPRESS", "off")
+if _grad_compress not in _VALID_GRAD_COMPRESS:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_GRAD_COMPRESS="
+          f"{_grad_compress!r} (valid: {', '.join(_VALID_GRAD_COMPRESS)}); "
+          f"using off", file=sys.stderr)
+    _grad_compress = "off"
 if _bwd_duality not in _VALID_BWD_DUALITY:
     import sys
     print(f"repro.backend: ignoring invalid REPRO_BWD_DUALITY="
@@ -164,3 +179,33 @@ def use_bwd_duality(mode: str):
         yield
     finally:
         _bwd_duality = prev
+
+
+def get_grad_compress() -> str:
+    """Data-parallel gradient-reduction wire format: "off" = exact f32 psum;
+    "int8" = error-feedback compressed psum (1/4 the bytes, residual carried
+    in the train state).  See ``train/distributed.py`` / DESIGN.md §11."""
+    return _grad_compress
+
+
+def set_grad_compress(mode: str) -> None:
+    global _grad_compress
+    assert mode in _VALID_GRAD_COMPRESS, mode
+    _grad_compress = mode
+
+
+@contextmanager
+def use_grad_compress(mode: str):
+    global _grad_compress
+    prev = _grad_compress
+    set_grad_compress(mode)
+    try:
+        yield
+    finally:
+        _grad_compress = prev
+
+
+def resolve_grad_compress(mode: str | None) -> str:
+    mode = mode or _grad_compress
+    assert mode in _VALID_GRAD_COMPRESS, mode
+    return mode

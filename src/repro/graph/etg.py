@@ -25,11 +25,20 @@ class ETG:
 def extend_nl(nodes: list[Node]) -> list[Node]:
     """NL Extender: insert explicit Split nodes where a tensor feeds >1
     consumer (fwd: fan-out copy; bwd: gradient sum — autodiff handles the
-    reduction, the node marks the communication point for the scheduler)."""
+    reduction, the node marks the communication point for the scheduler).
+
+    Pure: consumer rewiring happens on copies, never on the caller's nodes,
+    and the users index is built once up front instead of rescanning the
+    whole list per node (the old O(n²) walk)."""
+    nodes = [dataclasses.replace(n, inputs=list(n.inputs)) for n in nodes]
+    users_of: dict[str, list[Node]] = {}
+    for m in nodes:
+        for i in set(m.inputs):
+            users_of.setdefault(i, []).append(m)
     out = []
     for n in nodes:
         out.append(n)
-        users = [m for m in nodes if n.name in m.inputs]
+        users = users_of.get(n.name, [])
         if len(users) > 1 and n.op not in ("input",):
             split = Node(f"{n.name}_split", "split", [n.name],
                          dict(fanout=len(users)))

@@ -24,10 +24,21 @@ from repro.graph.etg import ETG, build_etg
 
 
 def _shard_map():
-    sm = getattr(jax, "shard_map", None)
-    if sm is None:    # pre-0.5 jax keeps it in experimental
-        from jax.experimental.shard_map import shard_map as sm
-    return sm
+    from repro.launch.mesh import shard_map_fn
+    return shard_map_fn()
+
+
+def apply_bn_updates(params, stats, bn_momentum):
+    """Fold freshly collected batch statistics into the running BN stats —
+    in place, on a params tree the caller owns (the post-SGD tree).  Shared
+    by the single-device step and the data-parallel step, where ``stats``
+    arrives pre-averaged across shards (``train/distributed.py``)."""
+    for name, (mu, var) in stats.items():
+        params[name]["mean"] = bn_momentum * params[name]["mean"] \
+            + (1 - bn_momentum) * mu
+        params[name]["var"] = bn_momentum * params[name]["var"] \
+            + (1 - bn_momentum) * var
+    return params
 
 
 def _maxpool(x, window, stride, padding):
@@ -215,9 +226,5 @@ class GxM:
             self.loss, has_aux=True)(params, batch, collect_stats=True)
         new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
         # running BN statistics (non-gradient state)
-        for name, (mu, var) in stats.items():
-            new[name]["mean"] = bn_momentum * new[name]["mean"] \
-                + (1 - bn_momentum) * mu
-            new[name]["var"] = bn_momentum * new[name]["var"] \
-                + (1 - bn_momentum) * var
+        apply_bn_updates(new, stats, bn_momentum)
         return new, loss

@@ -152,8 +152,8 @@ class CnnInferenceEngine:
         # or analytic fallback — never a behavioral cliff); None defers to
         # the global REPRO_AUTOTUNE knob
         self.autotune = autotune
-        self.num_shards = int(mesh.shape.get("data", 1)) if mesh is not None \
-            else 1
+        from repro.launch.mesh import data_axis_size
+        self.num_shards = data_axis_size(mesh) if mesh is not None else 1
         self.buckets = tuple(sorted(buckets)) if buckets else \
             make_buckets(max_batch, num_shards=self.num_shards)
         assert all(b % self.num_shards == 0 for b in self.buckets), \

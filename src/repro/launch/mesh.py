@@ -10,14 +10,40 @@ from __future__ import annotations
 import jax
 
 
+def shard_map_fn():
+    """The ``shard_map`` entry point across jax versions (pre-0.5 keeps it
+    in ``jax.experimental``).  Shared by the GxM executor and the
+    data-parallel training step."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(*, model: int = 1):
-    """Tiny mesh over whatever devices exist (tests / local runs)."""
-    n = len(jax.devices())
+def make_host_mesh(*, model: int = 1, data: int | None = None):
+    """Tiny mesh over whatever devices exist (tests / local runs).
+
+    ``data`` caps the data-parallel width to a subset of the available
+    devices — the elastic re-scale path builds a *smaller* mesh in the same
+    process this way (``train.fault_tolerance.elastic_reshard_cnn``)."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs)
     model = min(model, n)
-    return jax.make_mesh((n // model, model), ("data", "model"))
+    width = n // model if data is None else min(data, n // model)
+    assert width >= 1, (n, model, data)
+    grid = np.asarray(devs[:width * model], dtype=object).reshape(
+        width, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def data_axis_size(mesh) -> int:
+    """Width of the data-parallel axis (1 when the mesh has none)."""
+    return int(mesh.shape.get("data", 1))

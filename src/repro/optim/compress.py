@@ -28,6 +28,44 @@ def decompress_int8(q, scale, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def compressed_psum_tree(grads, axis_name: str, residuals):
+    """Leaf-wise ``compressed_psum`` over a gradient pytree: returns the
+    de-quantized *mean* gradient tree and the new per-shard residual tree.
+    This is the reduction the data-parallel CNN train step inserts between
+    the update pass and the optimizer when ``REPRO_GRAD_COMPRESS=int8``
+    (``train/distributed.py``)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        gq, nr = compressed_psum(g, axis_name, r)
+        out_g.append(gq)
+        out_r.append(nr)
+    return (jax.tree_util.tree_unflatten(treedef, out_g),
+            jax.tree_util.tree_unflatten(treedef, out_r))
+
+
+def fold_residual(residual, new_shards: int):
+    """Re-shard an error-feedback residual tree onto a narrower data axis.
+
+    Residual leaves carry a leading ``(n_shards,)`` axis (one error
+    accumulator per shard).  Elastic re-scale must preserve the *total*
+    un-applied gradient mass — sum-fold groups of old shards into each new
+    shard (old width divisible by new), else collapse everything into shard
+    0 and zero the rest."""
+    def fold(r):
+        old = r.shape[0]
+        if old == new_shards:
+            return r
+        if old % new_shards == 0:
+            return r.reshape(new_shards, old // new_shards,
+                             *r.shape[1:]).sum(axis=1)
+        total = r.sum(axis=0, keepdims=True)
+        pad = jnp.zeros((new_shards - 1, *r.shape[1:]), r.dtype)
+        return jnp.concatenate([total, pad], axis=0)
+    return jax.tree.map(fold, residual)
+
+
 def compressed_psum(g, axis_name: str, residual=None):
     """Quantize -> psum(int32 accumulate) -> dequantize, with error
     feedback.  All shards must quantize against a COMMON scale (the pmax of

@@ -8,7 +8,10 @@ Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf.
     and writes on a worker thread — the train loop keeps stepping;
   * elastic:  leaves are stored unsharded (gathered); ``restore`` takes a
     target sharding tree, so a checkpoint written on mesh A restores onto
-    mesh B (different data/model parallelism) — the re-scale path.
+    mesh B (different data/model parallelism) — the re-scale path.  State
+    whose *shape* depends on the mesh width (the DP CNN step's per-shard
+    int8 residual) goes through ``fault_tolerance.elastic_reshard_cnn``,
+    which folds before placing.
 """
 from __future__ import annotations
 
@@ -119,11 +122,8 @@ def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
         if key in flat_s:
             arr = jax.device_put(arr, flat_s[key])
         out[key] = arr
-    leaves = [out[k] for k in sorted(flat_t)]
-    # restore original leaf order (flatten sorted by path above)
-    order = {k: i for i, k in enumerate(sorted(flat_t))}
-    ordered = [leaves[order[k]] for k in flat_t]
-    return jax.tree_util.tree_unflatten(treedef, ordered)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [out[k] for k in flat_t])
 
 
 def _gc(ckpt_dir, keep: int):

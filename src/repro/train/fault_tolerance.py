@@ -127,3 +127,17 @@ def elastic_reshard(ckpt_dir, step, state_template, new_shardings):
     (global step) is layout-independent by construction."""
     return ckpt_lib.restore(ckpt_dir, step, state_template,
                             shardings=new_shardings)
+
+
+def elastic_reshard_cnn(ckpt_dir, step, state_template, new_mesh, *,
+                        axis: str = "data"):
+    """Elastic re-scale for the data-parallel CNN train state
+    (``train/distributed.py``): params and step restore replicated as
+    usual, but the int8 error-feedback residual carries one accumulator
+    per *old* shard — it cannot simply re-place onto a narrower mesh.
+    Restore unsharded (the template has the old width), sum-fold the
+    residual groups onto the new width (no un-applied gradient mass is
+    dropped), then place per ``cnn_state_shardings``."""
+    from repro.train.distributed import reshard_cnn_state
+    state = ckpt_lib.restore(ckpt_dir, step, state_template)
+    return reshard_cnn_state(state, new_mesh, axis=axis)

@@ -1,20 +1,24 @@
-"""Train / prefill / decode step builders (pjit-ready, mesh-agnostic).
+"""Train / prefill / decode step builders.
 
-``make_train_step`` closes over the model config and optimizer; the caller
-jits it with shardings derived from the logical-axis spec trees
-(``nn.partitioning``).  Gradient all-reduce across the data axes is
-implicit in the sharded autodiff; overlap comes from the XLA latency-hiding
-scheduler (see launch/dryrun.py flags) plus optional microbatch gradient
-accumulation (``accum_steps``) which pipelines the dW reduction of
-microbatch i with the compute of i+1 — the paper's §II-J trade-off at
-cluster scale.
+``make_train_step`` (the LM step) is pjit-ready and mesh-agnostic: it
+closes over the model config and optimizer; the caller jits it with
+shardings derived from the logical-axis spec trees (``nn.partitioning``).
+Gradient all-reduce across the data axes is implicit in the sharded
+autodiff; overlap comes from the XLA latency-hiding scheduler (see
+launch/dryrun.py flags) plus optional microbatch gradient accumulation
+(``accum_steps``) which pipelines the dW reduction of microbatch i with the
+compute of i+1 — the paper's §II-J trade-off at cluster scale.
 
 ``make_cnn_train_step`` / ``warmup_cnn_train`` are the GxM (CNN) siblings:
 the step routes every conv through ``core.conv.conv2d_train``'s custom VJP
 — tiled forward kernel, phase-duality backward-data, band-streamed update
 pass (DESIGN.md §4/§10) — and the warmup pre-tunes the "fwd", "bwd"
 (dual-conv) and "wu" blocking-cache signatures of the whole training graph
-so the first step never tunes inline.
+so the first step never tunes inline.  The CNN step here is *device-local*
+by construction; its data-parallel sibling —
+``train.distributed.make_cnn_train_step_dp``, explicit ``shard_map`` over
+the mesh's data axis with the gradient psum placed between the update pass
+and the optimizer — is what multi-device runs use (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -92,15 +96,24 @@ def make_cnn_train_step(gxm, *, lr: float = 0.1, bn_momentum: float = 0.9,
 
 def warmup_cnn_train(gxm, *, image_hw=(224, 224), minibatch: int = 1,
                      mode: str = "tune", backend=None, cache=None,
-                     bwd_mode: str | None = None) -> list[dict]:
+                     bwd_mode: str | None = None, mesh=None) -> list[dict]:
     """Pre-tune every blocking-cache entry one training step of ``gxm``
     needs: the "fwd" signature of each distinct conv, the "bwd" signatures
     of its backward-data dual conv(s), and its "wu" update-pass signature —
     the training analog of serving's ``CnnInferenceEngine.warmup`` (which
-    only covers forward).  Returns the ``tune.warmup_convs`` report."""
+    only covers forward).  With ``mesh``, ``minibatch`` is the *global*
+    batch and the entries are keyed at the per-shard batch the data-parallel
+    step's shard_map body lowers to; tuning runs once per host —
+    ``train.distributed.warmup_cnn_train_dp`` wraps this with the
+    export/broadcast half.  Returns the ``tune.warmup_convs`` report."""
     from repro import tune
     from repro.graph.serving import conv_shapes, distinct_conv_signatures
 
+    if mesh is not None:
+        from repro.launch.mesh import data_axis_size
+        shards = data_axis_size(mesh)
+        assert minibatch % shards == 0, (minibatch, shards)
+        minibatch //= shards
     sigs = distinct_conv_signatures(conv_shapes(gxm.etg, image_hw))
     return tune.warmup_convs(sigs, minibatches=(minibatch,),
                              kinds=("fwd", "bwd", "wu"), mode=mode,

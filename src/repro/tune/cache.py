@@ -137,6 +137,35 @@ class TuneCache:
                           f"({self.path}: {e}); continuing in-memory",
                           file=sys.stderr)
 
+    def export_entries(self, keys=None) -> dict[str, dict]:
+        """Snapshot entries (all, or just ``keys``) as a JSON-serializable
+        payload — the "broadcast" half of tune-once-per-host warmup: host 0
+        tunes, exports, and every other host ``merge_entries`` the payload
+        instead of re-searching the same space (DESIGN.md §11)."""
+        with self._lock:
+            entries = self._load_locked()
+            if keys is None:
+                return {k: dict(v) for k, v in entries.items()}
+            return {k: dict(entries[k]) for k in keys if k in entries}
+
+    def merge_entries(self, payload: dict[str, dict], *,
+                      persist: bool = True) -> int:
+        """Install a broadcast payload verbatim (tuned_at/score preserved).
+        Returns the number of entries installed."""
+        with self._lock:
+            self._load_locked().update(
+                {k: dict(v) for k, v in payload.items()})
+        if persist:
+            try:
+                self.save()
+            except OSError as e:
+                if not self._warned_readonly:
+                    self._warned_readonly = True
+                    print(f"repro.tune: cache not persisted "
+                          f"({self.path}: {e}); continuing in-memory",
+                          file=sys.stderr)
+        return len(payload)
+
     def clear(self) -> None:
         with self._lock:
             self._entries = {}

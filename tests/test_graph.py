@@ -69,6 +69,38 @@ def test_inception_branches_and_split_nodes():
     assert bool(jnp.isfinite(out).all())
 
 
+def test_extend_nl_pure_and_indexed():
+    """The NL Extender must rewire *copies*: the caller's nodes keep their
+    original inputs (they may be re-used to build another ETG), every
+    multi-consumer tensor gets exactly one split node with the right
+    fanout, and single-consumer/input tensors are left alone."""
+    from repro.core.fusion import Node
+    from repro.graph.etg import extend_nl
+    nodes = [
+        Node("input", "input", [], {}),
+        Node("a", "conv", ["input"], {}),
+        Node("u1", "relu", ["a"], {}),
+        Node("u2", "relu", ["a"], {}),
+        Node("u3", "add", ["u1", "u2"], {}),
+    ]
+    before = {n.name: list(n.inputs) for n in nodes}
+    out = extend_nl(nodes)
+    # caller's nodes untouched (copies were rewired, not the originals)
+    for n in nodes:
+        assert n.inputs == before[n.name], (n.name, n.inputs)
+    by_name = {n.name: n for n in out}
+    assert by_name["a_split"].attrs["fanout"] == 2
+    assert by_name["u1"].inputs == ["a_split"]
+    assert by_name["u2"].inputs == ["a_split"]
+    assert by_name["u3"].inputs == ["u1", "u2"]      # single consumers
+    assert sum(1 for n in out if n.op == "split") == 1
+    # a consumer listing the same tensor twice still counts as one user
+    twice = [Node("input", "input", [], {}),
+             Node("a", "conv", ["input"], {}),
+             Node("u", "add", ["a", "a"], {})]
+    assert all(n.op != "split" for n in extend_nl(twice))
+
+
 def test_toposort_detects_cycles():
     import pytest
     from repro.core.fusion import Node

@@ -1,0 +1,284 @@
+"""Data-parallel CNN training over GxM (train/distributed.py, DESIGN.md
+§11).  Multi-device behaviour runs in *subprocesses* with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (the
+tests/test_distributed.py pattern) so the main test process keeps seeing
+exactly 1 device.
+
+Pinned semantics:
+  * fp32 reduction introduces ZERO numerical deviation: an n-shard step
+    whose shards see identical local batches is bit-identical to the
+    single-device step (psum of equal values / n is exact for power-of-two
+    n), and distinct shards match the host-side average-of-shard-grads
+    reference;
+  * the int8 compressed psum path converges on the tiny-ResNet loss with
+    the residual carrying quantization error across steps;
+  * accum_steps=k equals accum_steps=1 when the microbatches are
+    duplicates (the identity the semantics are defined by);
+  * the sharded train state round-trips through checkpoint save/restore
+    and elastic-reshards onto a narrower mesh with no residual mass lost.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp
+    import numpy as np
+    assert len(jax.devices()) == 8
+    from repro.graph import GxM, resnet50
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.distributed import (init_cnn_train_state_dp,
+                                         make_cnn_train_step_dp,
+                                         shard_cnn_batch)
+
+    def tiny(hw=32):
+        m = GxM(resnet50(num_classes=10, stages=(1, 1, 1, 1)),
+                num_classes=10)
+        return m, m.init(jax.random.PRNGKey(0))
+
+    def images(rng, n, hw=32):
+        return {"image": jnp.asarray(rng.standard_normal((n, hw, hw, 3)),
+                                     jnp.float32),
+                "label": jnp.asarray(rng.integers(0, 10, size=(n,)))}
+""" % os.path.join(REPO, "src")
+
+
+def run_sub(body: str) -> str:
+    code = textwrap.dedent(_PRELUDE) + textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_dp_step_bit_exact_vs_single_device():
+    """2-shard fp32 DP step with identical local batches == single-device
+    step, bitwise: replicated-params spec + exact psum/2 reduction means
+    the sharded path adds no numerics of its own."""
+    out = run_sub("""
+        from repro.train.step import make_cnn_train_step
+        m, params = tiny()
+        rng = np.random.default_rng(0)
+        mb = images(rng, 2)
+        batch = jax.tree.map(lambda x: jnp.concatenate([x, x]), mb)
+        mesh = make_host_mesh(data=2)
+        state = init_cnn_train_state_dp(params, mesh)
+        dp = make_cnn_train_step_dp(m, mesh, lr=0.1)
+        ref = make_cnn_train_step(m, lr=0.1)
+        ref_params = params
+        for _ in range(2):
+            state, metrics = dp(state, shard_cnn_batch(batch, mesh))
+            ref_params, ref_loss = ref(ref_params, mb)
+        assert float(metrics["loss"]) == float(ref_loss), \\
+            (float(metrics["loss"]), float(ref_loss))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(ref_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(state["step"]) == 2
+        print("BITEXACT-OK", float(metrics["loss"]))
+    """)
+    assert "BITEXACT-OK" in out
+
+
+def test_dp_step_distinct_shards_match_host_reference():
+    """Distinct per-shard data: the step must equal the defined semantics —
+    per-shard grads/BN-stats averaged across shards, then one SGD update."""
+    out = run_sub("""
+        from repro.graph.executor import apply_bn_updates
+        m, params = tiny()
+        rng = np.random.default_rng(0)
+        batch = images(rng, 4)
+        mesh = make_host_mesh(data=2)
+        state = init_cnn_train_state_dp(params, mesh)
+        dp = make_cnn_train_step_dp(m, mesh, lr=0.1)
+        got, metrics = dp(state, shard_cnn_batch(batch, mesh))
+
+        lf = lambda p, b: m.loss(p, b, collect_stats=True)
+        halves = [jax.tree.map(lambda x: x[:2], batch),
+                  jax.tree.map(lambda x: x[2:], batch)]
+        outs = [jax.value_and_grad(lf, has_aux=True)(params, h)
+                for h in halves]
+        gavg = jax.tree.map(lambda a, b: (a + b) / 2,
+                            outs[0][1], outs[1][1])
+        savg = jax.tree.map(lambda a, b: (a + b) / 2,
+                            outs[0][0][1], outs[1][0][1])
+        exp = jax.tree.map(lambda p, g: p - 0.1 * g, params, gavg)
+        apply_bn_updates(exp, savg, 0.9)
+        for a, b in zip(jax.tree.leaves(got["params"]),
+                        jax.tree.leaves(exp)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+        loss_exp = (float(outs[0][0][0]) + float(outs[1][0][0])) / 2
+        assert abs(float(metrics["loss"]) - loss_exp) < 1e-5
+        print("SEMANTICS-OK")
+    """)
+    assert "SEMANTICS-OK" in out
+
+
+def test_dp_int8_compressed_psum_converges():
+    """REPRO_GRAD_COMPRESS=int8: error-feedback compressed reduction must
+    still converge on the tiny-ResNet batch, with a live (nonzero, sharded)
+    residual carrying the quantization error between steps."""
+    out = run_sub("""
+        m, params = tiny()
+        rng = np.random.default_rng(0)
+        batch = images(rng, 4)
+        mesh = make_host_mesh(data=2)
+        state = init_cnn_train_state_dp(params, mesh, grad_compress="int8")
+        r0 = jax.tree.leaves(state["residual"])[0]
+        assert r0.shape[0] == 2                      # one accumulator/shard
+        assert "data" in str(r0.sharding.spec)
+        dp = make_cnn_train_step_dp(m, mesh, lr=0.02, grad_compress="int8")
+        sb = shard_cnn_batch(batch, mesh)
+        losses = []
+        for _ in range(8):
+            state, metrics = dp(state, sb)
+            losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses).all(), losses
+        assert losses[-1] < losses[0], losses
+        rmax = max(float(jnp.abs(r).max())
+                   for r in jax.tree.leaves(state["residual"]))
+        assert rmax > 0, "residual never carried any quantization error"
+        print("INT8-OK", losses[0], losses[-1], rmax)
+    """)
+    assert "INT8-OK" in out
+
+
+def test_dp_accum_steps_identity():
+    """accum_steps=2 == accum_steps=1 when each shard's local batch is two
+    copies of the same microbatch (64x64 images keep the last-stage BN
+    statistics well-conditioned, so the identity is tight in f32)."""
+    out = run_sub("""
+        m, params = tiny(hw=64)
+        rng = np.random.default_rng(0)
+        ab, cd = images(rng, 2, hw=64), images(rng, 2, hw=64)
+        local0 = jax.tree.map(lambda a: jnp.concatenate([a, a]), ab)
+        local1 = jax.tree.map(lambda a: jnp.concatenate([a, a]), cd)
+        batch = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                             local0, local1)
+        mesh = make_host_mesh(data=2)
+        state = init_cnn_train_state_dp(params, mesh)
+        s1 = make_cnn_train_step_dp(m, mesh, lr=0.1, accum_steps=1)
+        s2 = make_cnn_train_step_dp(m, mesh, lr=0.1, accum_steps=2)
+        sb = shard_cnn_batch(batch, mesh)
+        a1, m1 = s1(state, sb)
+        a2, m2 = s2(state, sb)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+        for a, b in zip(jax.tree.leaves(a1["params"]),
+                        jax.tree.leaves(a2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+        print("ACCUM-OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "ACCUM-OK" in out
+
+
+def test_dp_checkpoint_roundtrip_sharded_state(tmp_path):
+    """The sharded train state (int8: residual split over the data axis)
+    round-trips through checkpoint save/restore-with-shardings: leaves are
+    gathered on save and land back on their mesh axes on restore."""
+    out = run_sub(f"""
+        from repro.train import checkpoint as C
+        from repro.train.distributed import cnn_state_shardings
+        m, params = tiny()
+        rng = np.random.default_rng(0)
+        batch = images(rng, 4)
+        mesh = make_host_mesh(data=2)
+        state = init_cnn_train_state_dp(params, mesh, grad_compress="int8")
+        dp = make_cnn_train_step_dp(m, mesh, lr=0.02, grad_compress="int8")
+        sb = shard_cnn_batch(batch, mesh)
+        state, _ = dp(state, sb)
+        C.save({str(tmp_path)!r}, 1, state)
+        template = jax.device_get(state)
+        shardings = cnn_state_shardings(mesh, template)
+        restored = C.restore({str(tmp_path)!r}, 1, template,
+                             shardings=shardings)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        r = jax.tree.leaves(restored["residual"])[0]
+        assert "data" in str(r.sharding.spec), r.sharding
+        s1, m1 = dp(state, sb)
+        s2, m2 = dp(restored, sb)
+        assert float(m1["loss"]) == float(m2["loss"])
+        print("CKPT-OK", int(restored["step"]))
+    """)
+    assert "CKPT-OK 1" in out
+
+
+def test_dp_elastic_rescale_to_smaller_mesh(tmp_path):
+    """Capacity shrinks 4 -> 2: elastic_reshard_cnn restores the checkpoint
+    onto the narrower mesh, sum-folding the per-shard residual so the total
+    un-applied gradient mass is preserved, and training continues."""
+    out = run_sub(f"""
+        from repro.train import checkpoint as C
+        from repro.train.fault_tolerance import elastic_reshard_cnn
+        m, params = tiny()
+        rng = np.random.default_rng(0)
+        batch8 = images(rng, 8)
+        mesh4 = make_host_mesh(data=4)
+        state = init_cnn_train_state_dp(params, mesh4, grad_compress="int8")
+        dp4 = make_cnn_train_step_dp(m, mesh4, lr=0.02, grad_compress="int8")
+        state, _ = dp4(state, shard_cnn_batch(batch8, mesh4))
+        C.save({str(tmp_path)!r}, 1, state)
+
+        old_res_sum = jax.tree.map(lambda r: np.asarray(r).sum(axis=0),
+                                   jax.device_get(state["residual"]))
+        mesh2 = make_host_mesh(data=2)
+        state2 = elastic_reshard_cnn({str(tmp_path)!r}, 1,
+                                     jax.device_get(state), mesh2)
+        for r in jax.tree.leaves(state2["residual"]):
+            assert r.shape[0] == 2, r.shape
+        new_res_sum = jax.tree.map(lambda r: np.asarray(r).sum(axis=0),
+                                   jax.device_get(state2["residual"]))
+        for a, b in zip(jax.tree.leaves(old_res_sum),
+                        jax.tree.leaves(new_res_sum)):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(state2["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        dp2 = make_cnn_train_step_dp(m, mesh2, lr=0.02, grad_compress="int8")
+        batch4 = jax.tree.map(lambda x: x[:4], batch8)
+        state2, metrics = dp2(state2, shard_cnn_batch(batch4, mesh2))
+        assert np.isfinite(float(metrics["loss"]))
+        print("ELASTIC-CNN-OK", float(metrics["loss"]))
+    """)
+    assert "ELASTIC-CNN-OK" in out
+
+
+def test_warmup_dp_tunes_once_and_broadcasts(tmp_path, monkeypatch):
+    """Host-0 warmup tunes the per-shard-batch entries once and exports a
+    payload; install_warmup_entries on a cold cache (another host) serves
+    every key without re-tuning.  Single-device: the mesh is degenerate but
+    the per-shard batch division and the export/merge path are real."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "host0.json"))
+    import jax
+
+    from repro.graph import GxM, resnet50
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.distributed import (install_warmup_entries,
+                                         warmup_cnn_train_dp)
+    from repro.tune.cache import TuneCache
+
+    m = GxM(resnet50(num_classes=10, stages=(1, 1, 1, 1)), num_classes=10)
+    mesh = make_host_mesh()
+    host0 = TuneCache(str(tmp_path / "host0.json"))
+    report, payload = warmup_cnn_train_dp(m, mesh, global_batch=2,
+                                          image_hw=(32, 32),
+                                          backend="interpret", cache=host0)
+    assert all(e["cached"] for e in report)
+    assert set(payload) == {e["key"] for e in report}
+    assert {e["kind"] for e in report} == {"fwd", "bwd", "wu"}
+
+    host1 = TuneCache(str(tmp_path / "host1.json"))
+    assert install_warmup_entries(payload, host1) == len(payload)
+    for key, entry in payload.items():
+        got = host1.lookup(key)
+        assert got is not None and got["blocking"] == entry["blocking"], key

@@ -1,0 +1,56 @@
+"""BENCH_train_scaling invariants: the modeled DP-training scaling table
+(the acceptance bar of the paper's multi-node claim) — 2-device fp32
+efficiency stays ≥ 0.8, int8 compression never scales worse than fp32, and
+the committed JSON matches what the model generates (the file other
+sessions diff against)."""
+import json
+import pathlib
+
+from benchmarks.train_scaling_bench import (BYTES_PER_PARAM, DEVICE_COUNTS,
+                                            OUT_PATH, REDUCTIONS,
+                                            build_report, step_times_s)
+
+
+def _cell(rows, devices, reduction):
+    return next(r for r in rows
+                if r["devices"] == devices and r["reduction"] == reduction)
+
+
+def test_table_covers_device_and_reduction_grid():
+    rows = build_report()["rows"]
+    assert {(r["devices"], r["reduction"]) for r in rows} == \
+        {(d, red) for d in DEVICE_COUNTS for red in REDUCTIONS}
+    assert set(DEVICE_COUNTS) == {1, 2, 4}
+    assert set(REDUCTIONS) == {"fp32", "int8"}
+
+
+def test_scaling_efficiency_acceptance():
+    rows = build_report()["rows"]
+    # the acceptance bar: 2-device fp32 efficiency >= 0.8
+    assert _cell(rows, 2, "fp32")["scaling_efficiency"] >= 0.8
+    for red in REDUCTIONS:
+        assert _cell(rows, 1, red)["scaling_efficiency"] == 1.0
+    for d in DEVICE_COUNTS:
+        f, q = _cell(rows, d, "fp32"), _cell(rows, d, "int8")
+        # compressed reduction never scales worse, on either bound
+        assert q["scaling_efficiency"] >= f["scaling_efficiency"], d
+        assert q["no_overlap_efficiency"] >= f["no_overlap_efficiency"], d
+        # efficiency is throughput/n normalized: consistent with images/s
+        assert q["images_per_s"] >= f["images_per_s"], d
+
+
+def test_int8_moves_quarter_the_bytes():
+    assert BYTES_PER_PARAM["int8"] * 4 == BYTES_PER_PARAM["fp32"]
+    rows = build_report()["rows"]
+    for d in (2, 4):
+        f, q = _cell(rows, d, "fp32"), _cell(rows, d, "int8")
+        assert q["wire_bytes_per_step"] * 4 == f["wire_bytes_per_step"]
+        _, t_ar_f, _ = step_times_s(d, "fp32")
+        _, t_ar_q, _ = step_times_s(d, "int8")
+        assert abs(t_ar_q * 4 - t_ar_f) < 1e-12
+
+
+def test_committed_json_matches_model():
+    committed = json.loads(pathlib.Path(OUT_PATH).read_text())
+    assert committed == build_report(), \
+        "regenerate with: python -m benchmarks.train_scaling_bench"
