@@ -26,7 +26,7 @@ import json
 import pathlib
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import bench_out_path, emit
 from benchmarks.conv_fwd_bench import layer_tables
 from repro.configs.shapes import STEM_CONV
 from repro.core.blocking import (VMEM_BUDGET, conv_blocking_analytic,
@@ -172,7 +172,8 @@ def build_report(*, measure: bool = False) -> dict:
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else (argv or [])
     report = build_report(measure="--measure" in argv)
-    OUT_PATH.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
     for tname, recs in report["tables"].items():
         for rec in recs:
             wt, wl = rec["wu"]["tiled"], rec["wu"]["whole_plane"]
@@ -186,7 +187,7 @@ def main(argv=None) -> None:
                  f"dilate_us={bd['cost_us']};"
                  f"hbm_ratio={bp['hbm_bytes'] / max(bd['hbm_bytes'], 1):.4f};"
                  f"duality={rec['duality_scenario']};n_convs={bp['n_convs']}")
-    emit("bwd_wu_bench_json", 0, f"wrote={OUT_PATH.name}")
+    emit("bwd_wu_bench_json", 0, f"wrote={out_path}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,26 @@
+import os
+import pathlib
 import time
 
 import jax
+
+
+def bench_out_path(default_path) -> "pathlib.Path":
+    """Where a bench writes its JSON artifact.
+
+    Default: the committed repo-root location (``default_path``).  When
+    ``REPRO_BENCH_OUT`` names a directory (``benchmarks.run --out-dir`` /
+    ``--check`` set it), the artifact lands there instead, so a perf-gate
+    run can generate fresh output to diff against the committed baselines
+    without dirtying the working tree.
+    """
+    out_dir = os.environ.get("REPRO_BENCH_OUT")
+    default_path = pathlib.Path(default_path)
+    if not out_dir:
+        return default_path
+    d = pathlib.Path(out_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    return d / default_path.name
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5):

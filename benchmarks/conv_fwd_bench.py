@@ -18,7 +18,7 @@ import json
 import pathlib
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import bench_out_path, emit
 from repro.core.blocking import VMEM_BUDGET, conv_blocking_analytic, \
     conv_working_set
 from repro.core.conv import lane_ok
@@ -125,7 +125,8 @@ def build_report(*, measure: bool = False) -> dict:
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else (argv or [])
     report = build_report(measure="--measure" in argv)
-    OUT_PATH.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
     for tname, recs in report["tables"].items():
         for rec in recs:
             t, wp = rec["tiled"], rec["whole_plane"]
@@ -134,7 +135,7 @@ def main(argv=None) -> None:
                  f"hbm_ratio={t['hbm_bytes'] / max(wp['hbm_bytes'], 1):.3f};"
                  f"ws_ratio={t['vmem_working_set'] / wp['vmem_working_set']:.3f};"
                  f"whole_fits_vmem={int(wp['fits_vmem'])}")
-    emit("conv_fwd_bench_json", 0, f"wrote={OUT_PATH.name}")
+    emit("conv_fwd_bench_json", 0, f"wrote={out_path}")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,45 @@
 """Paper §III (Inception-v3, the second benchmark topology): end-to-end
-GxM step timing + fusion statistics for the branchy graph (Split nodes)."""
-import jax
-import jax.numpy as jnp
-import numpy as np
+GxM step timing + fusion statistics for the branchy graph (Split nodes).
 
-from benchmarks.common import emit, time_call
-from repro.graph import GxM, inception_v3
+``build_report()`` is the machine-checkable half (pinned by
+``tests/test_inception_bench.py``): the symbolic ETG walk — fusion
+statistics, split-node count, conv-task count vs distinct JIT kernels
+after dedupe (the combinatorial-explosion answer for the branchy graph) —
+none of which needs a wall clock.  ``main()`` additionally times the
+jitted forward and train step on a tiny image.
+"""
+from repro.graph import GxM
 from repro.graph.etg import build_etg
+from repro.graph.serving import conv_shapes, distinct_conv_signatures
+from repro.graph.topology import inception_v3
+
+IMAGE_HW = (299, 299)
+
+
+def build_report(*, image_hw=IMAGE_HW, num_classes: int = 1000) -> dict:
+    etg = build_etg(inception_v3(num_classes=num_classes))
+    shapes = conv_shapes(etg, image_hw)
+    return {
+        "topology": "inception_v3",
+        "image": list(image_hw),
+        "stats": dict(etg.stats),
+        "split_nodes": sum(1 for t in etg.tasks if t.op == "split"),
+        "conv_tasks": len(shapes),
+        "distinct_jit_kernels": len(etg.kernel_cache),
+        "distinct_conv_signatures": len(distinct_conv_signatures(shapes)),
+    }
 
 
 def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import emit, time_call
+
     rng = np.random.default_rng(0)
     nl = inception_v3(num_classes=100)
-    etg = build_etg(inception_v3(num_classes=100))
+    report = build_report(num_classes=100, image_hw=(64, 64))
     m = GxM(nl, impl="xla", num_classes=100)
     params = m.init(jax.random.PRNGKey(0))
     x = jnp.asarray(rng.standard_normal((2, 64, 64, 3)), jnp.float32)
@@ -22,12 +49,12 @@ def main():
     us_f = time_call(fwd, params, x)
     step = jax.jit(m.sgd_train_step)
     us_t = time_call(step, params, batch)
-    n_split = sum(1 for t in etg.tasks if t.op == "split")
     emit("inception_infer", us_f,
-         f"fused_tasks={etg.stats['nodes_after']};"
-         f"ops_fused={etg.stats['ops_fused']};split_nodes={n_split}")
+         f"fused_tasks={report['stats']['nodes_after']};"
+         f"ops_fused={report['stats']['ops_fused']};"
+         f"split_nodes={report['split_nodes']}")
     emit("inception_train_step", us_t,
-         f"distinct_jit_kernels={len(etg.kernel_cache)}")
+         f"distinct_jit_kernels={report['distinct_jit_kernels']}")
 
 
 if __name__ == "__main__":

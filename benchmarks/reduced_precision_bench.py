@@ -2,19 +2,55 @@
 weights with f32 accumulation.  Measures quantization error on a real
 smoke model and reports the modeled decode speedup per arch (bytes-bound
 roofline: < 2x because KV/activations stay bf16 — the same reason the
-paper's int16 kernels got 1.6x, not 2x)."""
-import jax
-import jax.numpy as jnp
-import numpy as np
+paper's int16 kernels got 1.6x, not 2x).
 
-from benchmarks.common import emit, time_call
-from repro.configs import SHAPES, get_config, smoke_config
-from repro.core.quantize import dequantize, quantize_int8
+``build_report()`` is the machine-checkable half (pinned by
+``tests/test_reduced_precision_bench.py``): the analytic per-arch decode
+roofline, quantized vs not — modeled speedup must be > 1 (halving weight
+bytes always helps a bytes-bound decode) and < 2 (only the weights
+shrink).  ``main()`` additionally runs the numerical-drift measurement on
+a real smoke model.
+"""
+from repro.configs import SHAPES, get_config
 from repro.launch import analytic as A
-from repro.nn import transformer as T
+
+ARCHS = ("qwen3-8b", "jamba-1.5-large-398b", "dbrx-132b")
+SHAPE_NAME = "decode_32k"
+CHIPS = 256
+MODEL_PAR = 16
+DATA_PAR = 16
+
+
+def build_report() -> dict:
+    shape = SHAPES[SHAPE_NAME]
+    rows = []
+    for arch in ARCHS:
+        c = get_config(arch)
+        base = A.analytic_roofline(c, shape, chips=CHIPS,
+                                   model_par=MODEL_PAR, data_par=DATA_PAR)
+        q = A.analytic_roofline(c, shape, chips=CHIPS, model_par=MODEL_PAR,
+                                data_par=DATA_PAR, quantized=True)
+        rows.append({
+            "arch": arch,
+            "base_step_us": round(base.step_time_s * 1e6, 3),
+            "quantized_step_us": round(q.step_time_s * 1e6, 3),
+            "modeled_speedup": round(base.step_time_s / q.step_time_s, 4),
+            "base_dominant": base.dominant,
+            "quantized_dominant": q.dominant,
+        })
+    return {"shape": SHAPE_NAME, "chips": CHIPS, "model_par": MODEL_PAR,
+            "data_par": DATA_PAR, "rows": rows}
 
 
 def main():
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_call
+    from repro.configs import smoke_config
+    from repro.core.quantize import dequantize, quantize_int8
+    from repro.nn import transformer as T
+
     # numerical error on a real (smoke) model + decode logits drift
     cfg = smoke_config(get_config("qwen2-1.5b"))
     params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
@@ -29,16 +65,10 @@ def main():
     emit("int8_weights_fwd", us, f"softmax_drift={drift:.4f}")
 
     # modeled decode speedup per arch (memory-roofline ratio)
-    shape = SHAPES["decode_32k"]
-    for arch in ("qwen3-8b", "jamba-1.5-large-398b", "dbrx-132b"):
-        c = get_config(arch)
-        base = A.analytic_roofline(c, shape, chips=256, model_par=16,
-                                   data_par=16)
-        q = A.analytic_roofline(c, shape, chips=256, model_par=16,
-                                data_par=16, quantized=True)
-        emit(f"int8_decode_model_{arch}", q.step_time_s * 1e6,
-             f"speedup={base.step_time_s/q.step_time_s:.2f}x;"
-             f"dominant={q.dominant}")
+    for r in build_report()["rows"]:
+        emit(f"int8_decode_model_{r['arch']}", r["quantized_step_us"],
+             f"speedup={r['modeled_speedup']:.2f}x;"
+             f"dominant={r['quantized_dominant']}")
 
 
 if __name__ == "__main__":

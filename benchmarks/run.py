@@ -21,9 +21,29 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
 
 ``--dry`` is the CI smoke mode: it imports every module (catching bit-rot in
 the benchmark code itself) and runs only the cheap fast-path tables — the
-model-based autotune table on a few layers and the tiny-topology serving
-throughput table — instead of the full timed sweep.
+model-based autotune table on a few layers, the tiny-topology serving
+throughput table, and the three JSON-emitting model benches — instead of the
+full timed sweep.
+
+Perf-gate flags (DESIGN.md §12, ``repro.perfci``):
+
+  --out-dir DIR        write bench JSON artifacts under DIR instead of the
+                       committed repo-root locations (env: REPRO_BENCH_OUT)
+  --check              after the run, extract (metric, value) series from
+                       the fresh artifacts and compare them against
+                       BENCH_BASELINES.json under per-metric tolerance
+                       policies; exit non-zero on any regression.  With no
+                       --out-dir the fresh artifacts go to a temp dir so the
+                       working tree stays clean.
+  --update-baselines   re-pin BENCH_BASELINES.json for the current context
+                       (REPRO_VMEM_BUDGET) from this run's artifacts, stamp
+                       provenance, and append one BENCH_TRAJECTORY.json
+                       record.  Artifacts also refresh the committed
+                       BENCH_*.json files unless --out-dir says otherwise.
+  --baselines PATH     compare/update against PATH instead of the committed
+                       BENCH_BASELINES.json (tests inject copies here)
 """
+import argparse
 import os
 import sys
 import tempfile
@@ -51,11 +71,46 @@ MODULES = [
     ("train_scaling_bench", train_scaling_bench),
 ]
 
+# the fast-path tables that still *run* in --dry smoke mode (the three
+# model-based JSON emitters are all here: a dry run regenerates every
+# perf-gate artifact).  Data, not code, so failure-path tests and the
+# perf-gate can substitute their own lists.
+DRY_CALLS = [
+    ("autotune_bench", lambda: autotune_bench.main(limit=4)),
+    ("serve_cnn_bench", lambda: serve_cnn_bench.main(["--dry"])),
+    ("conv_fwd_bench", lambda: conv_fwd_bench.main([])),
+    ("bwd_wu_layers", lambda: bwd_wu_layers.main([])),
+    ("train_scaling_bench", lambda: train_scaling_bench.main([])),
+]
 
-def main(argv=None) -> None:
-    argv = sys.argv[1:] if argv is None else argv
-    dry = "--dry" in argv
-    print("name,us_per_call,derived")
+
+def parse_args(argv) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
+    ap.add_argument("--dry", action="store_true")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--update-baselines", action="store_true",
+                    dest="update_baselines")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--baselines", default=None)
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every gated metric, not just the changes")
+    return ap.parse_args(argv)
+
+
+def _resolve_out_dir(args) -> str | None:
+    """Set REPRO_BENCH_OUT for this run; returns the artifact directory the
+    perf-gate should read (None = committed repo-root locations)."""
+    out_dir = args.out_dir or os.environ.get("REPRO_BENCH_OUT")
+    if out_dir is None and args.check and not args.update_baselines:
+        # --check must not dirty the tree: fresh artifacts go to a temp dir
+        out_dir = tempfile.mkdtemp(prefix="repro-bench-")
+    if out_dir is not None:
+        os.environ["REPRO_BENCH_OUT"] = out_dir
+    return out_dir
+
+
+def run_benches(*, dry: bool) -> int:
+    """Run the suite (or the --dry fast path); returns the failure count."""
     failures = 0
     if dry:
         for name, _ in MODULES:
@@ -65,24 +120,7 @@ def main(argv=None) -> None:
             # (that would pre-satisfy autotune_bench's miss->hit round trip)
             os.environ["REPRO_TUNE_CACHE"] = os.path.join(
                 tempfile.mkdtemp(prefix="repro-dry-"), "cache.json")
-        try:
-            autotune_bench.main(limit=4)
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print("autotune_bench,0,FAILED", file=sys.stdout)
-            traceback.print_exc()
-        # fast-path tables that still run in smoke mode (conv_fwd_bench and
-        # bwd_wu_layers are model-based, so the dry run also refreshes
-        # BENCH_conv_fwd.json / BENCH_bwd_wu.json)
-        for name, call in (("serve_cnn_bench",
-                            lambda: serve_cnn_bench.main(["--dry"])),
-                           ("conv_fwd_bench",
-                            lambda: conv_fwd_bench.main([])),
-                           ("bwd_wu_layers",
-                            lambda: bwd_wu_layers.main([])),
-                           # model-based: refreshes BENCH_train_scaling.json
-                           ("train_scaling_bench",
-                            lambda: train_scaling_bench.main([]))):
+        for name, call in DRY_CALLS:
             try:
                 call()
             except Exception:  # noqa: BLE001
@@ -97,8 +135,39 @@ def main(argv=None) -> None:
                 failures += 1
                 print(f"{name},0,FAILED", file=sys.stdout)
                 traceback.print_exc()
+    return failures
+
+
+def main(argv=None) -> None:
+    args = parse_args(sys.argv[1:] if argv is None else argv)
+    out_dir = _resolve_out_dir(args)
+    print("name,us_per_call,derived")
+    failures = run_benches(dry=args.dry)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
+
+    if not (args.check or args.update_baselines):
+        return
+    from repro import perfci
+    fresh_root = out_dir or os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    if args.update_baselines:
+        cmd = "python -m benchmarks.run " + " ".join(
+            a for a in (argv if argv is not None else sys.argv[1:]))
+        perfci.run_update(fresh_root, baseline_path=args.baselines,
+                          command=cmd)
+    if args.check:
+        try:
+            verdict = perfci.run_check(fresh_root,
+                                       baseline_path=args.baselines,
+                                       verbose=args.verbose)
+        except perfci.MissingBaseline as e:
+            raise SystemExit(str(e))
+        if not verdict.ok:
+            raise SystemExit(
+                f"perf-gate: {len(verdict.failures)} gated metrics "
+                f"regressed — see table above (intentional change? "
+                f"re-pin with --update-baselines)")
 
 
 if __name__ == "__main__":

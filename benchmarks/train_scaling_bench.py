@@ -177,15 +177,16 @@ def main(argv=None) -> None:
         _worker(args)
         return
 
-    from benchmarks.common import emit
+    from benchmarks.common import bench_out_path, emit
     report = build_report()
-    OUT_PATH.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
     for r in report["rows"]:
         emit(f"train_scaling_model_n{r['devices']:02d}_{r['reduction']}", 0.0,
              f"imgs_per_s={r['images_per_s']};"
              f"eff={r['scaling_efficiency']};"
              f"no_overlap_eff={r['no_overlap_efficiency']}")
-    emit("train_scaling_bench_json", 0, f"wrote={OUT_PATH.name}")
+    emit("train_scaling_bench_json", 0, f"wrote={out_path}")
 
     measured = []
     if args.dry:

@@ -25,6 +25,14 @@ ICI_BW = 50e9                # bytes/s per link
 STEP_OVERHEAD_S = 5e-7       # grid-step pipeline-fill overhead (one source
                              # of truth; repro.tune.measure re-exports in us)
 
+# Stable result-dict keys.  The bench JSONs persist these names and the
+# perf-gate extractors (repro.perfci.extract) join on them — renaming one is
+# a baseline-schema change and must bump perfci's SCHEMA_VERSION.
+KERNEL_ROOFLINE_KEYS = ("compute_s", "memory_s", "step_time_s", "cost_s",
+                        "dominant", "efficiency")
+COMPOSITE_ROOFLINE_KEYS = ("cost_s", "flops", "hbm_bytes", "n_steps",
+                           "launches", "efficiency")
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,

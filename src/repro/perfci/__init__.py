@@ -1,0 +1,45 @@
+"""Roofline-gated perf regression CI (DESIGN.md §12).
+
+The three committed bench artifacts (BENCH_conv_fwd.json, BENCH_bwd_wu.json,
+BENCH_train_scaling.json) are point-in-time snapshots of the roofline model;
+this package turns them into a *gate* in the ReFrame mold — perf numbers
+expressed as pass/fail sanity checks against committed references:
+
+  extract     per-bench extractors pull named ``(metric_id, value)`` series
+              out of the bench JSONs (stable slash-separated metric IDs)
+  policy      per-metric tolerance rules: relative-drop thresholds, hard
+              floors ("2-dev fp32 scaling >= 0.8"), directional invariants
+              ("tiled never slower than whole-plane")
+  compare     baseline-vs-fresh comparison engine -> machine-readable
+              Verdict + human diff table
+  store       the committed baseline file (BENCH_BASELINES.json, keyed by
+              generation context) and the per-PR trajectory append log
+              (BENCH_TRAJECTORY.json)
+
+Entry points: ``python -m benchmarks.run --check`` (fail the build on
+regression) and ``--update-baselines`` (regenerate + stamp provenance +
+append one trajectory record).
+"""
+from repro.perfci.check import MissingBaseline, run_check, run_update
+from repro.perfci.compare import MetricResult, Verdict, compare
+from repro.perfci.extract import (SCHEMA_VERSION, context_key, extract_all,
+                                  extract_bwd_wu, extract_conv_fwd,
+                                  extract_train_scaling)
+from repro.perfci.policy import (DEFAULT_CONTEXT, DEFAULT_POLICIES,
+                                 Tolerance, policies_for_context, policy_for)
+from repro.perfci.store import (BASELINE_PATH, TRAJECTORY_PATH,
+                                append_trajectory, baseline_metrics,
+                                load_baselines, provenance,
+                                trajectory_record, update_baselines)
+
+__all__ = [
+    "SCHEMA_VERSION", "context_key", "extract_all", "extract_conv_fwd",
+    "extract_bwd_wu", "extract_train_scaling",
+    "Tolerance", "DEFAULT_POLICIES", "DEFAULT_CONTEXT", "policy_for",
+    "policies_for_context",
+    "MetricResult", "Verdict", "compare",
+    "BASELINE_PATH", "TRAJECTORY_PATH", "load_baselines", "baseline_metrics",
+    "update_baselines", "append_trajectory", "trajectory_record",
+    "provenance",
+    "MissingBaseline", "run_check", "run_update",
+]

@@ -1,0 +1,62 @@
+"""Gate driver — the logic behind ``benchmarks.run --check`` and
+``--update-baselines`` (kept here so tests can drive it without the bench
+harness, and the harness stays a thin CLI).
+"""
+from __future__ import annotations
+
+from repro.perfci.compare import Verdict, compare
+from repro.perfci.extract import extract_all
+from repro.perfci.policy import policies_for_context
+from repro.perfci.store import (append_trajectory, baseline_metrics,
+                                load_baselines, trajectory_record,
+                                update_baselines)
+
+
+class MissingBaseline(Exception):
+    """No committed baseline for the current generation context."""
+
+
+def run_check(fresh_root, *, baseline_path=None, verbose: bool = False,
+              out=print) -> Verdict:
+    """Compare the bench artifacts under ``fresh_root`` against the
+    committed baseline for their context; prints the human diff table and
+    returns the Verdict (caller decides the exit code)."""
+    context, fresh = extract_all(fresh_root)
+    doc = load_baselines(baseline_path)
+    base = baseline_metrics(doc, context)
+    if base is None:
+        have = sorted(doc.get("contexts", {}))
+        raise MissingBaseline(
+            f"perfci: no baseline for context '{context}' (have: {have}) — "
+            f"run `python -m benchmarks.run --dry --update-baselines` under "
+            f"the same REPRO_VMEM_BUDGET and commit the result")
+    verdict = compare(base, fresh, policies_for_context(context))
+    out(f"perfci: context={context} baseline="
+        f"{doc['contexts'][context]['provenance'].get('git_sha', '?')} "
+        f"({len(base)} metrics)")
+    out(verdict.diff_table(verbose=verbose))
+    return verdict
+
+
+def run_update(fresh_root, *, baseline_path=None, trajectory_path=None,
+               command: str = "", out=print) -> dict:
+    """Re-pin the baseline for the current context from the artifacts under
+    ``fresh_root``, stamp provenance, and append exactly one trajectory
+    record (with improved/regressed counts vs the previous baseline when
+    one existed)."""
+    context, fresh = extract_all(fresh_root)
+    prev = baseline_metrics(load_baselines(baseline_path), context)
+    verdict_json = compare(prev, fresh,
+                           policies_for_context(context)).to_json() \
+        if prev is not None else None
+    update_baselines(fresh, context, path=baseline_path, command=command)
+    rec = trajectory_record(context, fresh, verdict_json=verdict_json,
+                            command=command)
+    append_trajectory(rec, path=trajectory_path)
+    out(f"perfci: baseline[{context}] <- {len(fresh)} metrics; trajectory "
+        f"record appended ({rec['provenance']['git_sha']})")
+    if verdict_json is not None and not verdict_json["ok"]:
+        out(f"perfci: note — new baseline is WORSE than the previous one on "
+            f"{len(verdict_json['failures'])} metrics (intentional perf "
+            f"change? the trajectory records it)")
+    return rec

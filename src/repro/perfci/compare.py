@@ -1,0 +1,147 @@
+"""The comparison engine: baseline vs fresh metric series -> Verdict.
+
+Every metric in the union of the two series gets a ``MetricResult`` with a
+status:
+
+  ok          within tolerance of the baseline
+  improved    moved the good way by more than the tolerance (never fails;
+              surfaced so ``--update-baselines`` is run to ratchet)
+  regressed   moved the bad way past ``rel_tol``
+  floor       below a hard floor (fails even if the baseline was too)
+  ceiling     above a hard ceiling (cost-model invariant broken)
+  missing     in the baseline but absent from the fresh run — a silently
+              dropped layer/bench is a gate failure, not a skip
+  new         fresh metric with no baseline — passes, listed so the next
+              ``--update-baselines`` pins it
+
+``Verdict`` renders both ways: ``to_json()`` for machines, ``diff_table()``
+for the human reading the CI log.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.perfci.policy import DEFAULT_POLICIES, Tolerance, policy_for
+
+_EPS = 1e-12
+FAIL_STATUSES = ("regressed", "floor", "ceiling", "missing")
+
+
+@dataclasses.dataclass
+class MetricResult:
+    metric: str
+    baseline: float | None
+    current: float | None
+    status: str
+    policy: Tolerance | None = None
+    detail: str = ""
+
+    @property
+    def failed(self) -> bool:
+        return self.status in FAIL_STATUSES
+
+    @property
+    def rel_delta(self) -> float | None:
+        if self.baseline is None or self.current is None:
+            return None
+        return (self.current - self.baseline) / max(abs(self.baseline), _EPS)
+
+
+def _classify(metric: str, base: float, cur: float, pol: Tolerance
+              ) -> MetricResult:
+    if pol.floor is not None and cur < pol.floor - _EPS:
+        return MetricResult(metric, base, cur, "floor", pol,
+                            f"value {cur:.6g} < floor {pol.floor:.6g}")
+    if pol.ceiling is not None and cur > pol.ceiling + 1e-9:
+        return MetricResult(metric, base, cur, "ceiling", pol,
+                            f"value {cur:.6g} > ceiling {pol.ceiling:.6g}")
+    delta = (cur - base) / max(abs(base), _EPS)
+    if pol.direction == "higher":
+        bad, good = delta < -pol.rel_tol - _EPS, delta > pol.rel_tol + _EPS
+    elif pol.direction == "lower":
+        bad, good = delta > pol.rel_tol + _EPS, delta < -pol.rel_tol - _EPS
+    else:                                           # "both": any drift is bad
+        bad, good = abs(delta) > pol.rel_tol + _EPS, False
+    if bad:
+        return MetricResult(metric, base, cur, "regressed", pol,
+                            f"drift {delta:+.2%} exceeds "
+                            f"{pol.rel_tol:.0%} ({pol.direction} is better)")
+    if good:
+        return MetricResult(metric, base, cur, "improved", pol,
+                            f"drift {delta:+.2%}")
+    return MetricResult(metric, base, cur, "ok", pol)
+
+
+def compare(baseline: dict[str, float], current: dict[str, float],
+            policies: tuple[Tolerance, ...] = DEFAULT_POLICIES) -> "Verdict":
+    results = []
+    for metric in sorted(set(baseline) | set(current)):
+        base, cur = baseline.get(metric), current.get(metric)
+        if cur is None:
+            results.append(MetricResult(
+                metric, base, None, "missing", policy_for(metric, policies),
+                "metric present in baseline but absent from fresh run"))
+        elif base is None:
+            results.append(MetricResult(
+                metric, None, cur, "new", policy_for(metric, policies),
+                "no baseline yet — pin with --update-baselines"))
+        else:
+            results.append(_classify(metric, base, cur,
+                                     policy_for(metric, policies)))
+    return Verdict(results)
+
+
+@dataclasses.dataclass
+class Verdict:
+    results: list[MetricResult]
+
+    @property
+    def ok(self) -> bool:
+        return not any(r.failed for r in self.results)
+
+    @property
+    def counts(self) -> dict[str, int]:
+        c: dict[str, int] = {}
+        for r in self.results:
+            c[r.status] = c.get(r.status, 0) + 1
+        return c
+
+    @property
+    def failures(self) -> list[MetricResult]:
+        return [r for r in self.results if r.failed]
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "n_metrics": len(self.results),
+            "counts": self.counts,
+            "failures": [{
+                "metric": r.metric, "status": r.status,
+                "baseline": r.baseline, "current": r.current,
+                "detail": r.detail,
+                "policy": r.policy.pattern if r.policy else None,
+            } for r in self.failures],
+        }
+
+    def diff_table(self, *, verbose: bool = False, max_rows: int = 40) -> str:
+        """Human diff: failures + improvements (everything when verbose)."""
+        rows = [r for r in self.results
+                if verbose or r.failed or r.status in ("improved", "new")]
+        lines = [f"{'METRIC':60s} {'BASE':>12s} {'NEW':>12s} "
+                 f"{'DRIFT':>8s}  STATUS"]
+        for r in rows[:max_rows]:
+            base = "-" if r.baseline is None else f"{r.baseline:.6g}"
+            cur = "-" if r.current is None else f"{r.current:.6g}"
+            drift = "-" if r.rel_delta is None else f"{r.rel_delta:+.1%}"
+            status = r.status + (f"  [{r.detail}]" if r.detail else "")
+            lines.append(f"{r.metric:60s} {base:>12s} {cur:>12s} "
+                         f"{drift:>8s}  {status}")
+        if len(rows) > max_rows:
+            lines.append(f"... {len(rows) - max_rows} more rows elided")
+        c = self.counts
+        summary = ", ".join(f"{c[k]} {k}" for k in
+                            ("ok", "improved", "new", "regressed", "floor",
+                             "ceiling", "missing") if c.get(k))
+        lines.append(f"perf-gate: {'OK' if self.ok else 'FAIL'} "
+                     f"({len(self.results)} metrics: {summary})")
+        return "\n".join(lines)

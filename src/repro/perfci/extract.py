@@ -1,0 +1,144 @@
+"""Per-bench extractors: bench JSON -> flat ``{metric_id: value}`` series.
+
+Metric IDs are slash-separated and *stable* — they are the join key between
+a fresh bench run and the committed baseline, so renaming one (or renaming
+the bench JSON fields they read, see ``launch.roofline.KERNEL_ROOFLINE_KEYS``
+/ ``tune.measure.CONV_TRAFFIC_KEYS``) is a baseline-schema change and must
+bump ``SCHEMA_VERSION``.
+
+  conv_fwd/{table}/{layer}/tiled/{roofline_efficiency|cost_us|hbm_bytes}
+  conv_fwd/{table}/{layer}/tiled/fits_vmem            (0.0 | 1.0)
+  conv_fwd/{table}/{layer}/{cost|hbm}_margin          (whole-plane / tiled)
+  bwd_wu/{table}/{layer}/wu_tiled/{roofline_efficiency|cost_us|hbm_bytes}
+  bwd_wu/{table}/{layer}/wu_tiled/fits_vmem
+  bwd_wu/{table}/{layer}/wu_{cost|hbm}_margin         (legacy / tiled)
+  bwd_wu/{table}/{layer}/bwd_phase/{roofline_efficiency|cost_us}
+  bwd_wu/{table}/{layer}/bwd_hbm_margin               (dilate / phase)
+  train_scaling/d{devices}/{reduction}/{scaling_efficiency|
+                                        no_overlap_efficiency|images_per_s}
+
+Margins are ratios >= 1.0 by construction of the paper's claims ("tiled
+never slower than whole-plane", "zero-free duality never moves more
+bytes") — the directional invariants ``policy.DEFAULT_POLICIES`` floors at
+1.0 so the gate fails the moment a change flips one.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+SCHEMA_VERSION = 1
+
+# bench-name -> committed artifact filename (repo root)
+BENCH_FILES = {
+    "conv_fwd": "BENCH_conv_fwd.json",
+    "bwd_wu": "BENCH_bwd_wu.json",
+    "train_scaling": "BENCH_train_scaling.json",
+}
+
+_EPS = 1e-12
+
+
+def _ratio(num: float, den: float) -> float:
+    return num / max(den, _EPS)
+
+
+def extract_conv_fwd(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for tname, recs in report["tables"].items():
+        for rec in recs:
+            t, wp = rec["tiled"], rec["whole_plane"]
+            base = f"conv_fwd/{tname}/{rec['layer']}"
+            out[f"{base}/tiled/roofline_efficiency"] = t["roofline_efficiency"]
+            out[f"{base}/tiled/cost_us"] = t["cost_us"]
+            out[f"{base}/tiled/hbm_bytes"] = float(t["hbm_bytes"])
+            out[f"{base}/tiled/fits_vmem"] = float(t["fits_vmem"])
+            out[f"{base}/cost_margin"] = _ratio(wp["cost_us"], t["cost_us"])
+            out[f"{base}/hbm_margin"] = _ratio(wp["hbm_bytes"],
+                                               t["hbm_bytes"])
+    return out
+
+
+def extract_bwd_wu(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for tname, recs in report["tables"].items():
+        for rec in recs:
+            wt, wl = rec["wu"]["tiled"], rec["wu"]["whole_plane"]
+            ph, di = rec["bwd_data"]["phase"], rec["bwd_data"]["dilate"]
+            base = f"bwd_wu/{tname}/{rec['layer']}"
+            out[f"{base}/wu_tiled/roofline_efficiency"] = \
+                wt["roofline_efficiency"]
+            out[f"{base}/wu_tiled/cost_us"] = wt["cost_us"]
+            out[f"{base}/wu_tiled/hbm_bytes"] = float(wt["hbm_bytes"])
+            out[f"{base}/wu_tiled/fits_vmem"] = float(wt["fits_vmem"])
+            out[f"{base}/wu_cost_margin"] = _ratio(wl["cost_us"],
+                                                   wt["cost_us"])
+            out[f"{base}/wu_hbm_margin"] = _ratio(wl["hbm_bytes"],
+                                                  wt["hbm_bytes"])
+            out[f"{base}/bwd_phase/roofline_efficiency"] = \
+                ph["roofline_efficiency"]
+            out[f"{base}/bwd_phase/cost_us"] = ph["cost_us"]
+            out[f"{base}/bwd_hbm_margin"] = _ratio(di["hbm_bytes"],
+                                                   ph["hbm_bytes"])
+    return out
+
+
+def extract_train_scaling(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for r in report["rows"]:
+        base = f"train_scaling/d{r['devices']}/{r['reduction']}"
+        out[f"{base}/scaling_efficiency"] = r["scaling_efficiency"]
+        out[f"{base}/no_overlap_efficiency"] = r["no_overlap_efficiency"]
+        out[f"{base}/images_per_s"] = r["images_per_s"]
+    return out
+
+
+_EXTRACTORS = {
+    "conv_fwd": extract_conv_fwd,
+    "bwd_wu": extract_bwd_wu,
+    "train_scaling": extract_train_scaling,
+}
+
+
+def load_reports(root) -> dict[str, dict]:
+    """Read the three bench JSONs under ``root`` -> {bench_name: report}."""
+    root = pathlib.Path(root)
+    reports = {}
+    for bench, fname in BENCH_FILES.items():
+        path = root / fname
+        if not path.exists():
+            raise FileNotFoundError(
+                f"perfci: missing bench artifact {path} — run the emitting "
+                f"bench (benchmarks.run --dry regenerates all three)")
+        reports[bench] = json.loads(path.read_text())
+    return reports
+
+
+def context_key(reports: dict[str, dict]) -> str:
+    """The generation-context signature baselines are keyed by.
+
+    The bench model's only environment degree of freedom is the VMEM budget
+    (``REPRO_VMEM_BUDGET`` changes every analytic blocking, hence every
+    modeled number); backend / autotune knobs never reach the model-based
+    benches.  The per-report ``vmem_budget`` stamps must agree — comparing
+    a 16 MiB baseline against a 1 MiB fresh run would gate noise, not
+    regressions (the ReFrame analog: references are keyed by system).
+    """
+    budgets = {reports[b]["vmem_budget"]
+               for b in ("conv_fwd", "bwd_wu") if b in reports}
+    if len(budgets) > 1:
+        raise ValueError(f"perfci: bench artifacts disagree on vmem_budget "
+                         f"{sorted(budgets)} — regenerate them in one run")
+    if not budgets:
+        from repro.core.blocking import VMEM_BUDGET
+        budgets = {VMEM_BUDGET}
+    return f"vmem={budgets.pop()}"
+
+
+def extract_all(root) -> tuple[str, dict[str, float]]:
+    """-> (context_key, merged metric series) for the artifacts under root."""
+    reports = load_reports(root)
+    metrics: dict[str, float] = {}
+    for bench, report in reports.items():
+        metrics.update(_EXTRACTORS[bench](report))
+    return context_key(reports), metrics

@@ -1,0 +1,137 @@
+"""Committed baseline store + per-PR trajectory log.
+
+``BENCH_BASELINES.json`` (repo root) is the gate's reference: the extracted
+metric series per generation context, stamped with provenance —
+
+  {"schema_version": 1,
+   "contexts": {"vmem=16777216": {"provenance": {...}, "metrics": {...}},
+                "vmem=1048576":  {...}}}
+
+Contexts exist because the analytic blocking (hence every modeled number)
+depends on ``REPRO_VMEM_BUDGET``: the CI perf-gate runs the 1 MiB pressure
+context while a developer laptop runs the 16 MiB default, and each must be
+compared against a baseline generated under the *same* budget (the ReFrame
+per-system reference idiom).  ``--update-baselines`` refreshes only the
+context it runs under and preserves the others.
+
+``BENCH_TRAJECTORY.json`` is the append-only per-PR history the ROADMAP
+kept asking for: exactly one record per ``--update-baselines`` run, holding
+the headline aggregates (mean/min efficiencies, worst margins, scaling
+cells) plus provenance, so "did PR N make us faster" is one file read.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import time
+
+from repro.perfci.extract import SCHEMA_VERSION
+
+_ROOT = pathlib.Path(__file__).resolve().parents[3]
+BASELINE_PATH = _ROOT / "BENCH_BASELINES.json"
+TRAJECTORY_PATH = _ROOT / "BENCH_TRAJECTORY.json"
+
+
+def _git(*args: str) -> str:
+    try:
+        out = subprocess.run(["git", *args], cwd=_ROOT, capture_output=True,
+                             text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except Exception:  # noqa: BLE001 — no git binary / not a checkout
+        return "unknown"
+
+
+def provenance(*, command: str = "") -> dict:
+    return {
+        "generated_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git_sha": _git("rev-parse", "--short", "HEAD"),
+        "git_branch": _git("rev-parse", "--abbrev-ref", "HEAD"),
+        "command": command or "python -m benchmarks.run --update-baselines",
+    }
+
+
+def load_baselines(path=None) -> dict:
+    path = pathlib.Path(path or BASELINE_PATH)
+    if not path.exists():
+        return {"schema_version": SCHEMA_VERSION, "contexts": {}}
+    doc = json.loads(path.read_text())
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"perfci: baseline schema v{doc.get('schema_version')} != "
+            f"v{SCHEMA_VERSION} — regenerate with --update-baselines")
+    return doc
+
+
+def baseline_metrics(doc: dict, context: str) -> dict[str, float] | None:
+    ctx = doc.get("contexts", {}).get(context)
+    return None if ctx is None else ctx["metrics"]
+
+
+def update_baselines(metrics: dict[str, float], context: str, *, path=None,
+                     command: str = "") -> dict:
+    """Write ``metrics`` as the new reference for ``context`` (other
+    contexts preserved); returns the written document."""
+    path = pathlib.Path(path or BASELINE_PATH)
+    doc = load_baselines(path) if path.exists() else \
+        {"schema_version": SCHEMA_VERSION, "contexts": {}}
+    doc["schema_version"] = SCHEMA_VERSION
+    doc.setdefault("contexts", {})[context] = {
+        "provenance": provenance(command=command),
+        "n_metrics": len(metrics),
+        "metrics": {k: metrics[k] for k in sorted(metrics)},
+    }
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return doc
+
+
+# -- trajectory ---------------------------------------------------------------
+
+def _agg(metrics: dict[str, float], suffix: str) -> list[float]:
+    return [v for k, v in metrics.items() if k.endswith(suffix)]
+
+
+def trajectory_record(context: str, metrics: dict[str, float], *,
+                      verdict_json: dict | None = None,
+                      command: str = "") -> dict:
+    """Headline aggregates of one baseline refresh — the per-PR data point."""
+    fwd_eff = [v for k, v in metrics.items()
+               if k.startswith("conv_fwd/") and
+               k.endswith("roofline_efficiency")]
+    wu_eff = [v for k, v in metrics.items()
+              if "/wu_tiled/" in k and k.endswith("roofline_efficiency")]
+    margins = _agg(metrics, "_margin")
+    rec = {
+        "schema_version": SCHEMA_VERSION,
+        "context": context,
+        "provenance": provenance(command=command),
+        "n_metrics": len(metrics),
+        "summary": {
+            "conv_fwd_eff_mean": round(sum(fwd_eff) / len(fwd_eff), 4)
+            if fwd_eff else None,
+            "conv_fwd_eff_min": round(min(fwd_eff), 4) if fwd_eff else None,
+            "wu_eff_mean": round(sum(wu_eff) / len(wu_eff), 4)
+            if wu_eff else None,
+            "margin_min": round(min(margins), 4) if margins else None,
+            "scaling_d2_fp32": metrics.get(
+                "train_scaling/d2/fp32/scaling_efficiency"),
+            "scaling_d4_fp32": metrics.get(
+                "train_scaling/d4/fp32/scaling_efficiency"),
+            "scaling_d4_int8": metrics.get(
+                "train_scaling/d4/int8/scaling_efficiency"),
+        },
+    }
+    if verdict_json is not None:
+        rec["vs_previous"] = {k: verdict_json["counts"].get(k, 0)
+                              for k in ("improved", "regressed", "new",
+                                        "missing")}
+    return rec
+
+
+def append_trajectory(record: dict, *, path=None) -> dict:
+    path = pathlib.Path(path or TRAJECTORY_PATH)
+    doc = json.loads(path.read_text()) if path.exists() else \
+        {"schema_version": SCHEMA_VERSION, "records": []}
+    doc["records"].append(record)
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return doc

@@ -40,6 +40,13 @@ from repro.tune.space import out_dim
 
 STEP_OVERHEAD_US = STEP_OVERHEAD_S * 1e6
 
+# Stable traffic-dict keys (``conv_traffic`` / ``_wu_traffic``).  The bench
+# JSONs derive their persisted fields from these and the perf-gate extractors
+# (repro.perfci.extract) join on the derived names — renaming one is a
+# baseline-schema change and must bump perfci's SCHEMA_VERSION.
+CONV_TRAFFIC_KEYS = ("flops", "util", "x_bytes", "w_bytes", "o_bytes",
+                     "hbm_bytes", "n_steps", "extents")
+
 
 def _tile_util(extent: int) -> float:
     """Occupancy of a 128-wide MXU dimension holding `extent` elements."""

@@ -1,0 +1,39 @@
+"""fusion_bench invariants (§II-G operator fusion on the ETG): fusing the
+elementwise tail into the conv must only *remove* HBM round trips — fused
+traffic strictly below unfused, savings exactly accounted, and the graph
+stats consistent with the node merges that produced them."""
+from benchmarks.fusion_bench import build_report
+from repro.core.fusion import FUSABLE
+
+
+def test_fusion_saves_traffic_and_accounts_for_it():
+    report = build_report()
+    tr = report["traffic"]
+    assert tr["fused_hbm_bytes"] < tr["unfused_hbm_bytes"]
+    assert tr["saved_hbm_bytes"] == \
+        tr["unfused_hbm_bytes"] - tr["fused_hbm_bytes"]
+    # every saved byte is attributed to a specific conv's fused tail
+    assert tr["saved_hbm_bytes"] == \
+        sum(c["saved_bytes"] for c in report["convs"])
+
+
+def test_graph_stats_consistent_with_merges():
+    report = build_report()
+    stats = report["stats"]
+    assert stats["ops_fused"] > 0
+    # each fused elementwise op is one node folded away
+    assert stats["nodes_before"] - stats["nodes_after"] == stats["ops_fused"]
+    assert report["distinct_jit_kernels"] <= len(report["convs"])
+
+
+def test_per_conv_records_are_well_formed():
+    report = build_report()
+    assert report["topology"] == "resnet50"
+    assert len(report["convs"]) >= 50              # ResNet-50's conv count
+    fused_total = 0
+    for c in report["convs"]:
+        assert set(c["fused_ops"]) <= set(FUSABLE), c["layer"]
+        # each fused op saves one round trip of the conv's output tensor
+        assert c["saved_bytes"] == 2.0 * c["out_bytes"] * len(c["fused_ops"])
+        fused_total += len(c["fused_ops"])
+    assert fused_total == report["stats"]["ops_fused"]

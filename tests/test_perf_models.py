@@ -1,0 +1,126 @@
+"""Property tests for the analytic models the perf gate trusts: the
+block-refetch traffic model (tune.measure.conv_traffic), the band working
+set (core.blocking.conv_working_set), and the roofline cost functions
+(launch.roofline) — plus the stable-key contracts the perfci extractors
+join on."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocking import ConvBlocking, conv_working_set
+from repro.launch.roofline import (COMPOSITE_ROOFLINE_KEYS,
+                                   KERNEL_ROOFLINE_KEYS, composite_roofline,
+                                   kernel_roofline)
+from repro.tune.measure import CONV_TRAFFIC_KEYS, conv_traffic
+
+_shapes = st.tuples(
+    st.integers(7, 28),            # h == w
+    st.sampled_from([32, 64, 96]),  # c
+    st.sampled_from([32, 64, 128]),  # k
+    st.sampled_from([(1, 0), (3, 1)]),  # (r, padding)
+    st.integers(1, 2),             # stride
+)
+
+
+def _shape(h, c, k, rs_pad, stride):
+    r, pad = rs_pad
+    return {"h": h, "w": h, "c": c, "k": k, "r": r, "s": r,
+            "stride": stride, "padding": pad}
+
+
+def _blk(shape):
+    return ConvBlocking(rb_p=2, k_blk=min(shape["k"], 64),
+                        c_blk=min(shape["c"], 32), order="nkpc",
+                        vmem_bytes=0, rb_q=4)
+
+
+@settings(max_examples=25)
+@given(_shapes, st.integers(1, 4))
+def test_traffic_nondecreasing_in_minibatch(draw, n):
+    shape = _shape(*draw)
+    blk = _blk(shape)
+    small = conv_traffic(shape, blk, minibatch=n)
+    big = conv_traffic(shape, blk, minibatch=n + 1)
+    assert big["hbm_bytes"] >= small["hbm_bytes"]
+    assert big["flops"] > small["flops"]
+    assert big["n_steps"] >= small["n_steps"]
+
+
+@settings(max_examples=25)
+@given(_shapes, st.sampled_from(["fwd", "wu"]),
+       st.booleans())
+def test_traffic_nondecreasing_in_plane_size(draw, kind, whole_plane):
+    """More pixels never means less modeled work, whatever the schedule."""
+    shape = _shape(*draw)
+    blk = _blk(shape)
+    bigger = dict(shape, h=shape["h"] + 7, w=shape["w"] + 7)
+    t0 = conv_traffic(shape, blk, kind=kind, whole_plane=whole_plane)
+    t1 = conv_traffic(bigger, blk, kind=kind, whole_plane=whole_plane)
+    assert t1["hbm_bytes"] >= t0["hbm_bytes"]
+    assert t1["flops"] > t0["flops"]
+
+
+@settings(max_examples=25)
+@given(_shapes, st.integers(1, 4), st.integers(1, 8),
+       st.sampled_from(["fwd", "wu"]))
+def test_band_working_set_independent_of_plane(draw, rb_p, rb_q, kind):
+    """The §II-B claim the tiling rests on: for a fixed (rb_p, rb_q, c_blk)
+    band, per-step VMEM is the same at 7x7 and at 224x224 — only the
+    whole-plane legacy schedule scales with H*W."""
+    shape = _shape(*draw)
+    kw = dict(c=shape["c"], k_blk=64, r=shape["r"], s=shape["s"],
+              rb_p=rb_p, rb_q=rb_q, c_blk=32, padding=shape["padding"],
+              stride=shape["stride"], kind=kind)
+    q_of = lambda w: (w + 2 * shape["padding"] - shape["s"]) \
+        // shape["stride"] + 1
+    ws = conv_working_set(h=shape["h"], w=shape["w"], q=q_of(shape["w"]),
+                          **kw)
+    ws_big = conv_working_set(h=224, w=224, q=q_of(224), **kw)
+    assert ws == ws_big
+    # while the resident-plane model must grow with the image
+    wp = conv_working_set(h=shape["h"], w=shape["w"], q=q_of(shape["w"]),
+                          whole_plane=True, **kw)
+    wp_big = conv_working_set(h=224, w=224, q=q_of(224), whole_plane=True,
+                              **kw)
+    assert wp_big > wp
+
+
+@settings(max_examples=50)
+@given(st.floats(1e6, 1e15), st.floats(1.0, 1e12),
+       st.floats(0.05, 1.0), st.integers(0, 100000))
+def test_kernel_roofline_efficiency_in_unit_interval(flops, hbm, util,
+                                                     n_steps):
+    roof = kernel_roofline(flops=flops, hbm_bytes=hbm, util=util,
+                           n_steps=n_steps)
+    assert 0.0 < roof["efficiency"] <= 1.0
+    assert roof["cost_s"] >= roof["step_time_s"] > 0.0
+    assert roof["dominant"] in ("compute", "memory")
+
+
+@settings(max_examples=25)
+@given(st.lists(st.tuples(st.floats(1e6, 1e12), st.floats(1.0, 1e9),
+                          st.floats(0.05, 1.0), st.integers(0, 1000)),
+                min_size=1, max_size=4),
+       st.floats(0.0, 1e9))
+def test_composite_roofline_efficiency_and_conservation(parts, extra):
+    dicts = [{"flops": f, "hbm_bytes": b, "util": u, "n_steps": n}
+             for f, b, u, n in parts]
+    roof = composite_roofline(dicts, extra_hbm_bytes=extra)
+    assert 0.0 < roof["efficiency"] <= 1.0
+    assert roof["launches"] == len(dicts)
+    assert abs(roof["flops"] - sum(d["flops"] for d in dicts)) < 1e-6
+    assert roof["hbm_bytes"] >= extra
+    # serialized launches: composite cost >= any single launch's cost
+    solo = kernel_roofline(**{k: dicts[0][k] for k in
+                              ("flops", "hbm_bytes", "util", "n_steps")})
+    assert roof["cost_s"] >= solo["cost_s"] - 1e-12
+
+
+def test_stable_key_contracts():
+    """The perfci extractors join on these names; renaming any of them is a
+    baseline-schema change (bump perfci.SCHEMA_VERSION)."""
+    shape = _shape(14, 64, 64, (3, 1), 1)
+    t = conv_traffic(shape, _blk(shape))
+    assert set(CONV_TRAFFIC_KEYS) <= set(t)
+    roof = kernel_roofline(flops=1e9, hbm_bytes=1e6)
+    assert tuple(roof) == KERNEL_ROOFLINE_KEYS
+    comp = composite_roofline([t])
+    assert tuple(comp) == COMPOSITE_ROOFLINE_KEYS

@@ -1,0 +1,210 @@
+"""The roofline perf gate (repro.perfci, DESIGN.md §12): extractors over
+the committed bench artifacts, tolerance-policy semantics, the comparison
+engine's verdicts, the baseline/trajectory store round trip, and the
+acceptance demo — a synthetic regression injected into a baseline copy
+must flip the gate to a non-zero exit while the clean tree passes."""
+import json
+import pathlib
+
+import pytest
+
+from repro import perfci
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def fresh():
+    """(context, metrics) extracted from the committed bench artifacts."""
+    return perfci.extract_all(ROOT)
+
+
+@pytest.fixture(scope="module")
+def committed_baselines():
+    return perfci.load_baselines(ROOT / "BENCH_BASELINES.json")
+
+
+# -- extractors ---------------------------------------------------------------
+
+def test_extractors_cover_all_three_benches(fresh):
+    context, metrics = fresh
+    # committed artifacts are generated under the default budget; the
+    # context comes from the files, not the environment
+    assert context == perfci.DEFAULT_CONTEXT
+    prefixes = {m.split("/")[0] for m in metrics}
+    assert prefixes == {"conv_fwd", "bwd_wu", "train_scaling"}
+    assert len(metrics) > 300        # per-layer series, not a summary
+
+
+def test_extracted_invariants_hold_on_committed_artifacts(fresh):
+    _, metrics = fresh
+    for mid, v in metrics.items():
+        if mid.endswith("_margin"):
+            assert v >= 1.0, mid      # tiled/phase never lose at 16 MiB
+        if mid.endswith("/fits_vmem"):
+            assert v == 1.0, mid
+        if mid.endswith("roofline_efficiency"):
+            assert 0.0 < v <= 1.0, mid
+    assert metrics["train_scaling/d2/fp32/scaling_efficiency"] >= 0.8
+    assert metrics["train_scaling/d1/fp32/scaling_efficiency"] == 1.0
+
+
+def test_context_key_rejects_mixed_budget_artifacts():
+    reports = {
+        "conv_fwd": {"vmem_budget": 16 * 1024 * 1024},
+        "bwd_wu": {"vmem_budget": 1 << 20},
+    }
+    with pytest.raises(ValueError, match="vmem_budget"):
+        perfci.context_key(reports)
+
+
+# -- policies -----------------------------------------------------------------
+
+def test_policy_routing():
+    pol = perfci.policy_for("train_scaling/d2/fp32/scaling_efficiency")
+    assert pol.floor == 0.8 and pol.direction == "higher"
+    assert perfci.policy_for(
+        "train_scaling/d1/int8/scaling_efficiency").ceiling == 1.0
+    pol = perfci.policy_for("conv_fwd/resnet50/L01/cost_margin")
+    assert pol.floor == 1.0
+    pol = perfci.policy_for("conv_fwd/resnet50/L01/tiled/roofline_efficiency")
+    assert pol.ceiling == 1.0 and pol.direction == "higher"
+    assert perfci.policy_for("bwd_wu/x/y/wu_tiled/cost_us").direction == \
+        "lower"
+    assert perfci.policy_for("something/unknown").pattern == "*"
+
+
+def test_pressure_context_drops_margin_floor_only():
+    default = perfci.policies_for_context(perfci.DEFAULT_CONTEXT)
+    pressure = perfci.policies_for_context("vmem=1048576")
+    assert default == perfci.DEFAULT_POLICIES
+    d_margin = perfci.policy_for("a/b/cost_margin", default)
+    p_margin = perfci.policy_for("a/b/cost_margin", pressure)
+    assert d_margin.floor == 1.0 and p_margin.floor is None
+    # every other rule is shared
+    assert perfci.policy_for("a/b/fits_vmem", pressure).floor == 1.0
+    assert perfci.policy_for("train_scaling/d2/fp32/scaling_efficiency",
+                             pressure).floor == 0.8
+
+
+# -- comparison engine --------------------------------------------------------
+
+def test_compare_statuses():
+    base = {"x/cost_us": 100.0, "x/roofline_efficiency": 0.5,
+            "x/cost_margin": 1.5, "gone/cost_us": 1.0}
+    cur = {"x/cost_us": 101.0,              # +1% — within 2%: ok
+           "x/roofline_efficiency": 0.6,    # +20% the good way: improved
+           "x/cost_margin": 0.9,            # below the 1.0 floor: fail
+           "brand/new_metric": 3.0}         # no baseline: new (passes)
+    v = perfci.compare(base, cur)
+    by = {r.metric: r.status for r in v.results}
+    assert by == {"x/cost_us": "ok", "x/roofline_efficiency": "improved",
+                  "x/cost_margin": "floor", "gone/cost_us": "missing",
+                  "brand/new_metric": "new"}
+    assert not v.ok
+    assert {r.metric for r in v.failures} == {"x/cost_margin", "gone/cost_us"}
+    j = v.to_json()
+    assert j["ok"] is False and j["n_metrics"] == 5
+    assert "perf-gate: FAIL" in v.diff_table()
+
+
+def test_compare_relative_drop_direction():
+    # efficiency dropping 5% fails; cost rising 5% fails; both at 1% pass
+    v = perfci.compare({"a/roofline_efficiency": 0.80, "a/cost_us": 100.0},
+                       {"a/roofline_efficiency": 0.76, "a/cost_us": 105.0})
+    assert {r.metric for r in v.failures} == {"a/roofline_efficiency",
+                                              "a/cost_us"}
+    v = perfci.compare({"a/roofline_efficiency": 0.80, "a/cost_us": 100.0},
+                       {"a/roofline_efficiency": 0.792, "a/cost_us": 101.0})
+    assert v.ok
+
+
+def test_floor_fails_even_with_bad_baseline():
+    # the hard floor is absolute: a bad committed baseline cannot grandfather
+    # a below-bar value in
+    v = perfci.compare({"train_scaling/d2/fp32/scaling_efficiency": 0.7},
+                       {"train_scaling/d2/fp32/scaling_efficiency": 0.75})
+    assert [r.status for r in v.results] == ["floor"]
+
+
+def test_efficiency_above_one_is_a_model_bug():
+    v = perfci.compare({"a/roofline_efficiency": 0.9},
+                       {"a/roofline_efficiency": 1.2})
+    assert [r.status for r in v.results] == ["ceiling"]
+
+
+# -- baseline store + gate round trip -----------------------------------------
+
+def test_committed_baseline_matches_committed_artifacts(fresh,
+                                                        committed_baselines):
+    """The clean-tree acceptance: committed artifacts vs committed baseline
+    is all-ok under the committed context's policies."""
+    context, metrics = fresh
+    base = perfci.baseline_metrics(committed_baselines, context)
+    assert base is not None, "run benchmarks.run --dry --update-baselines"
+    v = perfci.compare(base, metrics, perfci.policies_for_context(context))
+    assert v.ok, v.diff_table()
+    assert v.counts == {"ok": len(metrics)}
+    # both the default and the CI pressure context are pinned
+    assert "vmem=1048576" in committed_baselines["contexts"]
+
+
+def test_synthetic_regression_flips_the_gate(tmp_path, fresh,
+                                             committed_baselines,
+                                             monkeypatch):
+    """The ISSUE acceptance demo: perturb one gated metric in a baseline
+    copy past its tolerance and the check must exit non-zero."""
+    context, _ = fresh
+    doc = json.loads(json.dumps(committed_baselines))    # deep copy
+    metrics = doc["contexts"][context]["metrics"]
+    mid = "conv_fwd/resnet50/L01/tiled/roofline_efficiency"
+    metrics[mid] *= 1.25          # baseline claims 25% more than we deliver
+    bpath = tmp_path / "baselines.json"
+    bpath.write_text(json.dumps(doc))
+    lines = []
+    verdict = perfci.run_check(ROOT, baseline_path=bpath, out=lines.append)
+    assert not verdict.ok
+    assert [r.metric for r in verdict.failures] == [mid]
+    assert any("perf-gate: FAIL" in ln for ln in lines)
+    # and the CLI surfaces it as a non-zero exit (benches stubbed out: the
+    # committed artifacts under ROOT stand in for a fresh run)
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(bench_run, "run_benches", lambda *, dry: 0)
+    monkeypatch.setenv("REPRO_BENCH_OUT", str(ROOT))
+    with pytest.raises(SystemExit, match="regressed"):
+        bench_run.main(["--dry", "--check", "--baselines", str(bpath)])
+
+
+def test_missing_baseline_context_is_actionable(tmp_path):
+    bpath = tmp_path / "empty.json"
+    with pytest.raises(perfci.MissingBaseline, match="update-baselines"):
+        perfci.run_check(ROOT, baseline_path=bpath)
+
+
+def test_update_appends_exactly_one_trajectory_record_per_run(tmp_path):
+    bpath = tmp_path / "baselines.json"
+    tpath = tmp_path / "trajectory.json"
+    rec = perfci.run_update(ROOT, baseline_path=bpath, trajectory_path=tpath,
+                            command="test", out=lambda *_: None)
+    doc = json.loads(tpath.read_text())
+    assert len(doc["records"]) == 1
+    assert rec["summary"]["scaling_d2_fp32"] >= 0.8
+    assert rec["provenance"]["command"] == "test"
+    assert "vs_previous" not in rec          # first pin: nothing to diff
+    # second run: one more record, now with the improved/regressed counts
+    perfci.run_update(ROOT, baseline_path=bpath, trajectory_path=tpath,
+                      command="test", out=lambda *_: None)
+    doc = json.loads(tpath.read_text())
+    assert len(doc["records"]) == 2
+    assert doc["records"][1]["vs_previous"]["regressed"] == 0
+    # the baseline store kept exactly one context, schema-versioned
+    bdoc = perfci.load_baselines(bpath)
+    assert bdoc["schema_version"] == perfci.SCHEMA_VERSION
+    assert list(bdoc["contexts"]) == [perfci.DEFAULT_CONTEXT]
+
+
+def test_baseline_schema_version_mismatch_rejected(tmp_path):
+    bpath = tmp_path / "old.json"
+    bpath.write_text(json.dumps({"schema_version": 0, "contexts": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        perfci.load_baselines(bpath)

@@ -1,0 +1,15 @@
+"""reduced_precision_bench invariants (Fig. 8 analog on LM serving): int8
+weights must model a real speedup on memory-bound decode — strictly above
+1x, bounded by the 2x weight-byte halving — for every pinned architecture."""
+from benchmarks.reduced_precision_bench import ARCHS, build_report
+
+
+def test_int8_modeled_speedup_bounds():
+    report = build_report()
+    assert tuple(r["arch"] for r in report["rows"]) == ARCHS
+    for row in report["rows"]:
+        assert row["quantized_step_us"] < row["base_step_us"], row["arch"]
+        assert 1.0 < row["modeled_speedup"] <= 2.0, row["arch"]
+        # the speedup story only holds while decode is memory-bound
+        assert row["base_dominant"] == "memory", row["arch"]
+        assert row["quantized_dominant"] == "memory", row["arch"]

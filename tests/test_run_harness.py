@@ -1,0 +1,91 @@
+"""The benchmarks.run CLI harness: failure rows + non-zero exit when a
+bench module blows up (both --dry and full mode), and the --out-dir /
+REPRO_BENCH_OUT redirection that keeps --check runs from dirtying the
+working tree."""
+import os
+import pathlib
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+
+
+class _FakeModule:
+    def __init__(self, fail: bool):
+        self.fail = fail
+        self.calls = 0
+
+    def main(self):
+        self.calls += 1
+        if self.fail:
+            raise RuntimeError("synthetic bench failure")
+
+
+def _boom():
+    raise RuntimeError("synthetic bench failure")
+
+
+def test_dry_mode_reports_failed_module(monkeypatch, capsys, tmp_path):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.setattr(bench_run, "MODULES",
+                        [("alpha", _FakeModule(False))])
+    monkeypatch.setattr(bench_run, "DRY_CALLS",
+                        [("good", lambda: None), ("bad", _boom)])
+    with pytest.raises(SystemExit, match="1 benchmark modules failed"):
+        bench_run.main(["--dry"])
+    out = capsys.readouterr().out
+    assert "alpha,0,IMPORT_OK" in out
+    assert "bad,0,FAILED" in out
+    assert "good,0,FAILED" not in out
+
+
+def test_full_mode_reports_failed_module(monkeypatch, capsys):
+    ok, bad = _FakeModule(False), _FakeModule(True)
+    monkeypatch.setattr(bench_run, "MODULES", [("ok", ok), ("bad", bad)])
+    with pytest.raises(SystemExit, match="1 benchmark modules failed"):
+        bench_run.main([])
+    out = capsys.readouterr().out
+    assert "bad,0,FAILED" in out
+    # the failure does not short-circuit the suite: every module still ran
+    assert ok.calls == 1 and bad.calls == 1
+
+
+def test_dry_mode_all_green_exits_clean(monkeypatch, capsys, tmp_path):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.setattr(bench_run, "MODULES", [("alpha", _FakeModule(False))])
+    monkeypatch.setattr(bench_run, "DRY_CALLS", [("good", lambda: None)])
+    bench_run.main(["--dry"])                 # no SystemExit
+    assert "name,us_per_call,derived" in capsys.readouterr().out
+
+
+def test_out_dir_flag_redirects_artifacts(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "cache.json"))
+    monkeypatch.setattr(bench_run, "MODULES", [])
+    monkeypatch.setattr(bench_run, "DRY_CALLS", [])
+    monkeypatch.setenv("REPRO_BENCH_OUT", "stale")   # flag must win
+    bench_run.main(["--dry", "--out-dir", str(tmp_path)])
+    assert os.environ["REPRO_BENCH_OUT"] == str(tmp_path)
+    # and the writer helper lands artifacts there, by basename
+    target = common.bench_out_path(pathlib.Path("/repo/BENCH_x.json"))
+    assert target == tmp_path / "BENCH_x.json"
+
+
+def test_check_without_out_dir_uses_tempdir(monkeypatch):
+    """--check alone must never write into the repo root."""
+    monkeypatch.delenv("REPRO_BENCH_OUT", raising=False)
+    args = bench_run.parse_args(["--dry", "--check"])
+    out_dir = bench_run._resolve_out_dir(args)
+    assert out_dir is not None
+    assert pathlib.Path(out_dir).name.startswith("repro-bench-")
+    assert os.environ["REPRO_BENCH_OUT"] == out_dir
+    monkeypatch.delenv("REPRO_BENCH_OUT")
+
+
+def test_plain_run_writes_committed_locations(monkeypatch):
+    monkeypatch.delenv("REPRO_BENCH_OUT", raising=False)
+    args = bench_run.parse_args(["--dry"])
+    assert bench_run._resolve_out_dir(args) is None
+    assert "REPRO_BENCH_OUT" not in os.environ
+    default = pathlib.Path("/repo/BENCH_x.json")
+    assert common.bench_out_path(default) == default
