@@ -81,6 +81,7 @@ DRY_CALLS = [
     ("conv_fwd_bench", lambda: conv_fwd_bench.main([])),
     ("bwd_wu_layers", lambda: bwd_wu_layers.main([])),
     ("train_scaling_bench", lambda: train_scaling_bench.main([])),
+    ("reduced_precision_q8", lambda: reduced_precision_bench.main_q8()),
 ]
 
 

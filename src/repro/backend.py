@@ -37,6 +37,13 @@ the DP CNN train step: "off" (default) reduces f32 gradients exactly;
 "int8" routes every leaf through ``optim.compress.compressed_psum`` —
 error-feedback int8 quantization, 1/4 the all-reduce bytes, residual
 carried in the train state.  See DESIGN.md §11.
+
+Quantized inference (``REPRO_QUANTIZE`` / ``set_quantize``) is the per-model
+opt-in for the §II-K int8 serving path: "off" (default) runs f32 convs;
+"int8" makes ``GxM``/``CnnInferenceEngine`` built without an explicit
+``quantized=`` flag mark every conv task "q8" — int8 weights + per-tensor
+calibrated activation scales through ``kernels.conv2d_q8``, int32
+accumulation, f32 dequant epilogue.  See DESIGN.md §13.
 """
 from __future__ import annotations
 
@@ -48,11 +55,19 @@ _VALID_AUTOTUNE = ("off", "cache", "tune")
 _VALID_CONV_TILING = ("tiled", "whole")
 _VALID_BWD_DUALITY = ("phase", "dilate")
 _VALID_GRAD_COMPRESS = ("off", "int8")
+_VALID_QUANTIZE = ("off", "int8")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
 _autotune = os.environ.get("REPRO_AUTOTUNE", "off")
 _conv_tiling = os.environ.get("REPRO_CONV_TILING", "tiled")
 _bwd_duality = os.environ.get("REPRO_BWD_DUALITY", "phase")
 _grad_compress = os.environ.get("REPRO_GRAD_COMPRESS", "off")
+_quantize = os.environ.get("REPRO_QUANTIZE", "off")
+if _quantize not in _VALID_QUANTIZE:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_QUANTIZE="
+          f"{_quantize!r} (valid: {', '.join(_VALID_QUANTIZE)}); "
+          f"using off", file=sys.stderr)
+    _quantize = "off"
 if _grad_compress not in _VALID_GRAD_COMPRESS:
     import sys
     print(f"repro.backend: ignoring invalid REPRO_GRAD_COMPRESS="
@@ -208,4 +223,34 @@ def use_grad_compress(mode: str):
 def resolve_grad_compress(mode: str | None) -> str:
     mode = mode or _grad_compress
     assert mode in _VALID_GRAD_COMPRESS, mode
+    return mode
+
+
+def get_quantize() -> str:
+    """Quantized-inference opt-in: "off" = f32 convs (default); "int8" =
+    the §II-K serving path — conv tasks marked "q8", int8 weights and
+    calibrated activations through ``kernels.conv2d_q8``.  DESIGN.md §13."""
+    return _quantize
+
+
+def set_quantize(mode: str) -> None:
+    global _quantize
+    assert mode in _VALID_QUANTIZE, mode
+    _quantize = mode
+
+
+@contextmanager
+def use_quantize(mode: str):
+    global _quantize
+    prev = _quantize
+    set_quantize(mode)
+    try:
+        yield
+    finally:
+        _quantize = prev
+
+
+def resolve_quantize(mode: str | None) -> str:
+    mode = mode or _quantize
+    assert mode in _VALID_QUANTIZE, mode
     return mode

@@ -82,7 +82,10 @@ def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
     the bwd-data dual *is* a forward launch) hold a weight block and an
     output tile + f32 accumulator next to the input; "wu" (the update pass)
     holds a dO pixel tile and the revisited (r, s, C_blk, K_blk) f32
-    weight-gradient accumulator tile instead.
+    weight-gradient accumulator tile instead; "q8" (the quantized forward,
+    §II-K — pass ``dtype_bytes=1``) streams int8 bands/weights but keeps an
+    f32 output tile + int32 accumulator, so the input side shrinks 4x while
+    the output side does not.
     """
     c_blk = c if not c_blk else c_blk
     rb_q = q if not rb_q else rb_q
@@ -98,7 +101,8 @@ def conv_working_set(*, h: int, w: int, c: int, k_blk: int, r: int, s: int,
         dw_acc = r * s * c_blk * k_blk * 4           # f32 revisited tile
         return x_bytes + do_tile + dw_acc
     wblk = r * s * c_blk * k_blk * dtype_bytes
-    out = rb_p * rb_q * k_blk * dtype_bytes
+    out_bytes = 4 if kind == "q8" else dtype_bytes   # q8 stores f32 (§II-K)
+    out = rb_p * rb_q * k_blk * out_bytes
     acc = rb_p * rb_q * k_blk * 4
     return x_bytes + wblk + out + acc
 
@@ -127,7 +131,7 @@ def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
     q = (w + 2 * padding - s) // stride + 1
     k_blk = aligned_block(k)
     whole = require_divisor if whole_plane is None else whole_plane
-    ws_kind = "wu" if kind == "wu" else "fwd"
+    ws_kind = kind if kind in ("wu", "q8") else "fwd"
 
     # c_blk is the reported blocking knob; c_model is what sits in VMEM
     # (the legacy wu kernel has no C blocking — its plane is resident at
@@ -161,7 +165,10 @@ def conv_blocking_analytic(*, h: int, w: int, c: int, k: int, r: int, s: int,
     # its row band is refetched once per P-block on every (K_b, C_b) pass,
     # so a taller block strictly cuts refetch traffic (and deepens the
     # pixel-block contraction) — there is no output-tile reuse to trade off.
-    grow_to_budget = kind == "wu" and not whole
+    # The q8 forward also grows: its int8 band is 4x smaller, so the same
+    # budget admits ~4x the rows — fewer grid steps and proportionally less
+    # halo refetch per output row (the §II-K blocking dividend).
+    grow_to_budget = kind in ("wu", "q8") and not whole
     best = cands[0]
     for rb in cands:
         if ws(rb, c_model, rb_q) > vmem_budget:
@@ -193,7 +200,8 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
     depends on how much batch-reuse amortizes weight traffic.  Kinds:
     "fwd" (tiled forward), "bwd" (the backward-data dual — same kernel,
     separate cache namespace), "wu" (band-streamed update pass; with
-    ``require_divisor=True`` the legacy resident-plane variant), "streams".
+    ``require_divisor=True`` the legacy resident-plane variant), "streams",
+    "q8" (int8 tiled forward — call with ``dtype_bytes=1``).
     """
     mode = _resolve_autotune(autotune)
     kind = kind or ("wu" if require_divisor else "fwd")

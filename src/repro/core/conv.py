@@ -64,6 +64,48 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
                          interpret=(impl == "interpret"))
 
 
+def conv2d_q8_fwd(x, w_q, *, x_scale, w_scale, stride=1, padding=1,
+                  bias=None, scale=None, shift=None, residual=None,
+                  relu=False, impl=None, autotune=None):
+    """Fused quantized forward conv (§II-K): quantize the f32 activation
+    against its calibrated per-tensor scale, run the int8 tiled kernel with
+    a per-K-channel dequant + f32 epilogue, return f32.
+
+    XLA / non-lane-aligned fallback: fold the premultiplied dequant scale
+    into the reference epilogue's BN-scale slot — ``(acc*deq)*bn + ...`` ==
+    ``acc*(deq*bn) + ...``, algebraically identical to the kernel path, so
+    the fallback differs only by f32 rounding, not by quantization scheme.
+    """
+    from repro.core.quantize import quantize_act
+    impl = be.resolve(impl)
+    n, h, wdt, c = x.shape
+    r, s, _, k = w_q.shape
+    x_q = quantize_act(x, x_scale)
+    if impl == "xla" or not lane_ok(c, k):
+        deq = (jnp.reshape(x_scale, ()).astype(jnp.float32)
+               * w_scale.astype(jnp.float32))
+        combined = deq if scale is None else deq * scale
+        combined_shift = shift if scale is not None else \
+            jnp.zeros((k,), jnp.float32)
+        # int8 operands as f32: ref.conv2d_fused casts its output to the
+        # input dtype, so feeding int8 directly would truncate the result
+        return ref.conv2d_fused(x_q.astype(jnp.float32),
+                                w_q.astype(jnp.float32), stride=stride,
+                                padding=padding, bias=bias, scale=combined,
+                                shift=combined_shift, residual=residual,
+                                relu=relu)
+    blk = conv_blocking(h=h, w=wdt, c=c, k=k, r=r, s=s, stride=stride,
+                        padding=padding, dtype_bytes=1, backend=impl,
+                        autotune=autotune, kind="q8", minibatch=n)
+    from repro.kernels.conv2d_q8 import conv2d_q8
+    return conv2d_q8(x_q, w_q, x_scale=x_scale, w_scale=w_scale,
+                     stride=stride, padding=padding, bias=bias, scale=scale,
+                     shift=shift, residual=residual, relu=relu,
+                     rb_p=blk.rb_p, k_blk=blk.k_blk, c_blk=blk.c_blk,
+                     rb_q=blk.rb_q, order=blk.order,
+                     interpret=(impl == "interpret"))
+
+
 def conv2d_bwd_data_via_fwd(do, w, *, stride, padding, input_hw, impl=None,
                             autotune=None, mode=None):
     """dI using the §II-I duality: transform weights, run the fwd kernel.

@@ -1,12 +1,21 @@
 """Reduced precision (paper §II-K, TPU serving edition).
 
 The paper's int16->int32 4VNNIW kernels halve the input bytes of the hot
-loop while keeping a 32-bit accumulator.  The serving-side analog: store
-weights int8 with per-output-channel scales, dequantize on the fly (XLA
-fuses the dequant into the consuming matmul), keep bf16/f32 math.  Decode
-is weight-bandwidth-bound, so the memory roofline term drops ~2x — same
-shape of win, new bottleneck (exactly the §III-B discussion: the output
-bytes don't shrink, so the speedup is < 2).
+loop while keeping a 32-bit accumulator.  Two analogs live here:
+
+* LM serving (``quantize_int8``/``dequantize``): store weights int8 with
+  per-output-channel scales, dequantize on the fly (XLA fuses the dequant
+  into the consuming matmul), keep bf16/f32 math.  Decode is
+  weight-bandwidth-bound, so the memory roofline term drops ~2x — same
+  shape of win, new bottleneck (exactly the §III-B discussion: the output
+  bytes don't shrink, so the speedup is < 2).
+
+* CNN serving (``calibrate_network``/``quantize_gxm_params``): the *real*
+  §II-K kernel path — per-conv activation scales calibrated from warmup
+  batches, int8 weights with per-K-channel scales, executed by
+  ``kernels.conv2d_q8`` (int8×int8→int32 accumulate, f32 dequant
+  epilogue).  All scales carry the same ``+ 1e-12`` guard so an all-zero
+  tensor quantizes to zeros instead of dividing by zero.  DESIGN.md §13.
 """
 from __future__ import annotations
 
@@ -50,6 +59,61 @@ def quantized_specs(param_specs, params_or_shapes, *, min_size: int = 1024):
             return spec
         return {"q": spec, "s": spec[-1:]}
     return jax.tree.map(leaf, param_specs, params_or_shapes, is_leaf=is_spec)
+
+
+def quantize_act(x, scale):
+    """Symmetric int8 activation quantization against a calibrated scale:
+    round-to-nearest, clip to ±127 (values beyond the calibration range
+    saturate instead of wrapping)."""
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                    -127, 127).astype(jnp.int8)
+
+
+def calibrate_network(gxm, params, batches) -> dict:
+    """Per-conv activation scales from warmup batches.
+
+    Runs the *f32* inference forward eagerly with a tap on every conv
+    input, aggregates the absolute max per conv task across ``batches``,
+    and returns ``{task_name: scale}`` with ``scale = absmax/127 + 1e-12``
+    (f32 scalars).  Deterministic: same params + same batches -> bit-equal
+    scales (pure max-reduction, no randomness).
+    """
+    absmax: dict = {}
+
+    def tap(name, v):
+        m = jnp.max(jnp.abs(v.astype(jnp.float32)))
+        prev = absmax.get(name)
+        absmax[name] = m if prev is None else jnp.maximum(prev, m)
+
+    for b in batches:
+        gxm.forward(params, jnp.asarray(b), train=False, tap=tap)
+    return {name: (m / 127.0 + 1e-12).astype(jnp.float32)
+            for name, m in absmax.items()}
+
+
+def quantize_gxm_params(etg, params, act_scales) -> dict:
+    """Quantize the conv weights of a GxM params tree for the q8 path.
+
+    For every conv task the ETG marked ``kernel_kind == "q8"``: replace
+    ``w`` with int8 ``w_q`` + per-K-channel ``w_scale`` and attach the
+    calibrated per-tensor activation ``x_scale``.  BN/bias leaves stay f32
+    (they fold into the f32 epilogue after dequantization).  Tasks without
+    a calibrated scale (never tapped) stay f32.
+    """
+    out = {name: dict(p) for name, p in params.items()}
+    for t in etg.tasks:
+        if t.op != "conv" or t.attrs.get("kernel_kind") != "q8":
+            continue
+        if t.name not in act_scales:
+            continue
+        p = out[t.name]
+        w = p.pop("w").astype(jnp.float32)
+        w_scale = jnp.max(jnp.abs(w), axis=(0, 1, 2)) / 127.0 + 1e-12
+        p["w_q"] = jnp.clip(jnp.round(w / w_scale), -127, 127) \
+            .astype(jnp.int8)
+        p["w_scale"] = w_scale.astype(jnp.float32)
+        p["x_scale"] = jnp.asarray(act_scales[t.name], jnp.float32)
+    return out
 
 
 def quantization_error(params, dtype=jnp.bfloat16):

@@ -80,17 +80,13 @@ def toposort(nodes: list[Node]) -> list[Node]:
 def conv_signature(n: Node) -> tuple:
     a = n.attrs
     fused_kinds = tuple(k for k, _ in n.fused)
+    # kernel_kind ("f32" | "q8") is part of the signature: the quantized
+    # kernel is a different code generator than the f32 one
     return (a["c"], a["k"], a["r"], a["s"], a["stride"], a["padding"],
-            fused_kinds)
+            fused_kinds, a.get("kernel_kind", "f32"))
 
 
-def build_etg(nl: list[Node], *, fuse: bool = True) -> ETG:
-    enl = extend_nl([dataclasses.replace(n, inputs=list(n.inputs),
-                                         attrs=dict(n.attrs),
-                                         fused=list(n.fused))
-                     for n in nl])
-    fused = fuse_network(enl) if fuse else enl
-    tasks = toposort(fused)
+def _assign_kernel_ids(tasks: list[Node]) -> dict[tuple, int]:
     # Dedupe: one JIT "code generator" entry per distinct conv signature —
     # the paper's answer to combinatorial kernel explosion.
     cache: dict[tuple, int] = {}
@@ -99,5 +95,35 @@ def build_etg(nl: list[Node], *, fuse: bool = True) -> ETG:
             sig = conv_signature(t)
             cache.setdefault(sig, len(cache))
             t.attrs["kernel_id"] = cache[sig]
+    return cache
+
+
+def quantize_etg(etg: ETG) -> ETG:
+    """Mark every conv task for the §II-K int8 kernel path and rebuild the
+    dedup cache (q8 signatures are distinct code-generator entries).  The
+    executor dispatches a task to ``conv2d_q8`` when its params carry
+    quantized leaves (``core.quantize.quantize_gxm_params``); a q8-marked
+    ETG with f32 params still runs the f32 path — that is what calibration
+    relies on."""
+    for t in etg.tasks:
+        if t.op == "conv":
+            t.attrs["kernel_kind"] = "q8"
+    etg.kernel_cache = _assign_kernel_ids(etg.tasks)
+    return etg
+
+
+def build_etg(nl: list[Node], *, fuse: bool = True,
+              quantized: bool = False) -> ETG:
+    enl = extend_nl([dataclasses.replace(n, inputs=list(n.inputs),
+                                         attrs=dict(n.attrs),
+                                         fused=list(n.fused))
+                     for n in nl])
+    fused = fuse_network(enl) if fuse else enl
+    tasks = toposort(fused)
+    if quantized:
+        for t in tasks:
+            if t.op == "conv":
+                t.attrs["kernel_kind"] = "q8"
+    cache = _assign_kernel_ids(tasks)
     return ETG(tasks=tasks, kernel_cache=cache,
                stats=fusion_stats(enl, fused))

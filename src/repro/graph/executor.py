@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.conv import conv2d_train, conv2d_fwd
+from repro.core.conv import conv2d_train, conv2d_fwd, conv2d_q8_fwd
 from repro.graph.etg import ETG, build_etg
 
 
@@ -52,10 +52,14 @@ class GxM:
     """Graph execution model over an ETG."""
 
     def __init__(self, nl, *, impl: str | None = None, fuse: bool = True,
-                 num_classes: int = 1000):
-        self.etg: ETG = build_etg(nl, fuse=fuse)
+                 num_classes: int = 1000, quantized: bool | None = None):
+        from repro import backend as be
+        if quantized is None:
+            quantized = be.get_quantize() == "int8"
+        self.etg: ETG = build_etg(nl, fuse=fuse, quantized=quantized)
         self.impl = impl
         self.num_classes = num_classes
+        self.quantized = quantized
 
     # -- parameter init -----------------------------------------------------
     def init(self, rng, dtype=jnp.float32):
@@ -91,11 +95,15 @@ class GxM:
 
     # -- forward ------------------------------------------------------------
     def forward(self, params, x, *, train: bool = True,
-                collect_stats: bool = False):
+                collect_stats: bool = False, tap=None):
         """Inference folds the *running* BN statistics into the conv
         epilogue (scale' = g/sqrt(var+eps), shift' = b - g*mean/sqrt(var+eps))
         — the paper's §II-G fused-BN; training uses batch statistics and,
-        with ``collect_stats``, also returns them for the running update."""
+        with ``collect_stats``, also returns them for the running update.
+
+        ``tap(name, inp)`` is called with every conv task's input tensor —
+        the calibration hook (``core.quantize.calibrate_network``); it has
+        side effects, so run tapped forwards eagerly, not under jit."""
         tensors = {"input": x}
         stats = {}
 
@@ -112,6 +120,8 @@ class GxM:
                 continue
             elif t.op == "conv":
                 inp = get(t.inputs[0])
+                if tap is not None:
+                    tap(t.name, inp)
                 p = params[t.name]
                 kw = dict(stride=a["stride"], padding=a["padding"])
                 scale = shift = bias = residual = None
@@ -126,6 +136,11 @@ class GxM:
                     elif kind == "add":
                         residual = get(attrs["residual"])
                 if train:
+                    if "w_q" in p:
+                        raise ValueError(
+                            f"conv {t.name} holds quantized weights (w_q); "
+                            f"the q8 path is inference-only — train with "
+                            f"the f32 params tree")
                     # training path: paper bwd pipeline via custom VJP;
                     # normalization handled outside the kernel (batch stats)
                     y = conv2d_train(inp, p["w"], a["stride"], a["padding"],
@@ -147,9 +162,20 @@ class GxM:
                     # BN folded from running stats
                     if scale is not None:
                         scale, shift = folded(p)
-                    y = conv2d_fwd(inp, p["w"], bias=bias, scale=scale,
-                                   shift=shift, residual=residual, relu=relu,
-                                   impl=self.impl, **kw)
+                    if a.get("kernel_kind") == "q8" and "w_q" in p:
+                        # §II-K quantized path: int8 kernel, f32 epilogue.
+                        # A q8-marked task with f32 params (no w_q) falls
+                        # through to the f32 kernel — the calibration pass.
+                        y = conv2d_q8_fwd(inp, p["w_q"],
+                                          x_scale=p["x_scale"],
+                                          w_scale=p["w_scale"], bias=bias,
+                                          scale=scale, shift=shift,
+                                          residual=residual, relu=relu,
+                                          impl=self.impl, **kw)
+                    else:
+                        y = conv2d_fwd(inp, p["w"], bias=bias, scale=scale,
+                                       shift=shift, residual=residual,
+                                       relu=relu, impl=self.impl, **kw)
                 out = y
             elif t.op == "bn":
                 y = get(t.inputs[0])

@@ -141,12 +141,27 @@ class CnnInferenceEngine:
     def __init__(self, gxm, params, *, image_hw=(224, 224), mesh=None,
                  max_batch: int = 32, buckets=None, dtype=jnp.float32,
                  donate_input: bool | None = None,
-                 autotune: str | None = "cache"):
+                 autotune: str | None = "cache",
+                 quantized: bool | None = None):
         self.gxm = gxm
         self.params = params
         self.image_hw = tuple(image_hw)
         self.mesh = mesh
         self.dtype = dtype
+        # §II-K int8 serving (DESIGN.md §13): None defers to how the GxM was
+        # built (its own default is the REPRO_QUANTIZE knob); an explicit
+        # True on an f32 GxM re-marks its ETG in place.  ``params`` stays
+        # the f32 tree — calibration runs on it; the quantized tree the
+        # request path uses is derived at warmup (``calibrate``).
+        if quantized is None:
+            quantized = bool(getattr(gxm, "quantized", False))
+        elif quantized and not getattr(gxm, "quantized", False):
+            from repro.graph.etg import quantize_etg
+            quantize_etg(gxm.etg)
+            gxm.quantized = True
+        self.quantized = quantized
+        self.qparams = None
+        self.act_scales = None
         # mode scoped around every trace/compile so the kernels' blocking
         # lookups see the entries warmup persisted ("cache": warmed winner
         # or analytic fallback — never a behavioral cliff); None defers to
@@ -173,6 +188,34 @@ class CnnInferenceEngine:
     def conv_shapes(self) -> list[dict]:
         return conv_shapes(self.gxm.etg, self.image_hw)
 
+    @property
+    def _run_params(self):
+        """The params tree the request path runs: the quantized tree once
+        calibration produced one, the f32 tree otherwise."""
+        if self.quantized and self.qparams is not None:
+            return self.qparams
+        return self.params
+
+    # -- calibration ---------------------------------------------------------
+    def calibrate(self, images=None, *, batches: int = 2, batch: int = 4,
+                  seed: int = 0) -> dict:
+        """Calibrate per-conv activation scales and build the quantized
+        params tree (``core.quantize``).  ``images`` is an iterable of
+        (n, H, W, 3) warmup batches; by default ``batches`` synthetic
+        batches are drawn from a fixed-seed generator, so calibration is
+        deterministic for a given seed.  Returns the scale dict."""
+        assert self.quantized, "calibrate() on a non-quantized engine"
+        from repro.core.quantize import calibrate_network, quantize_gxm_params
+        if images is None:
+            rng = np.random.default_rng(seed)
+            images = [rng.standard_normal(
+                (batch, *self.image_hw, 3)).astype(self.dtype)
+                for _ in range(batches)]
+        self.act_scales = calibrate_network(self.gxm, self.params, images)
+        self.qparams = quantize_gxm_params(self.gxm.etg, self.params,
+                                           self.act_scales)
+        return self.act_scales
+
     # -- warmup --------------------------------------------------------------
     def warmup(self, *, autotune: str = "tune", cache=None,
                compile_buckets: bool = True) -> dict:
@@ -194,6 +237,12 @@ class CnnInferenceEngine:
         backend = be.resolve(self.gxm.impl)
         sigs = distinct_conv_signatures(self.conv_shapes())
         minibatches = sorted({self.local_batch(b) for b in self.buckets})
+        if self.quantized and self.qparams is None:
+            self.calibrate()          # deterministic synthetic batches
+        # the quantized engine tunes/compiles the "q8" kind at 1 byte/elem;
+        # its 4x-smaller bands admit taller rb_p under the same budget
+        kind = "q8" if self.quantized else "fwd"
+        db = 1 if self.quantized else 4
         report = {
             "conv_signatures": len(sigs),
             "pallas_path_signatures":
@@ -204,18 +253,20 @@ class CnnInferenceEngine:
             "compile_s": {},
             "conv_tiling": be.get_conv_tiling(),
             "vmem_budget": VMEM_BUDGET,
+            "quantized": self.quantized,
         }
         if autotune != "off":
             entries = tune.warmup_convs(sigs, minibatches=minibatches,
-                                        mode=autotune, backend=backend,
-                                        cache=cache)
+                                        kinds=(kind,), mode=autotune,
+                                        backend=backend, cache=cache,
+                                        dtype_bytes=db)
             report["tune_entries"] = sum(1 for e in entries if e["cached"])
         # modeled per-grid-step VMEM high-water mark across the pallas-path
         # signatures (tiled: a row band — independent of image_hw, so large
         # serving buckets cannot blow the budget the way whole planes did)
-        ws = [conv_blocking(**sg, dtype_bytes=4, backend=backend,
+        ws = [conv_blocking(**sg, dtype_bytes=db, backend=backend,
                             autotune="cache" if autotune != "off" else "off",
-                            kind="fwd", minibatch=max(minibatches))
+                            kind=kind, minibatch=max(minibatches))
               .vmem_bytes
               for sg in sigs if lane_ok(sg["c"], sg["k"])]
         report["max_conv_vmem_bytes"] = max(ws, default=0)
@@ -239,7 +290,7 @@ class CnnInferenceEngine:
                 (bucket, *self.image_hw, 3), self.dtype)
             with self._autotune_scope():
                 self._compiled[bucket] = \
-                    self._fn.lower(self.params, x).compile()
+                    self._fn.lower(self._run_params, x).compile()
         return self._compiled[bucket]
 
     def aot_executable(self, bucket: int):
@@ -262,6 +313,6 @@ class CnnInferenceEngine:
                 [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)])
         fn = self._compiled.get(bucket)
         if fn is not None:
-            return fn(self.params, jnp.asarray(x))[:n]
+            return fn(self._run_params, jnp.asarray(x))[:n]
         with self._autotune_scope():      # unwarmed bucket: trace here
-            return self._fn(self.params, jnp.asarray(x))[:n]
+            return self._fn(self._run_params, jnp.asarray(x))[:n]

@@ -45,7 +45,8 @@ def run_update(fresh_root, *, baseline_path=None, trajectory_path=None,
     record (with improved/regressed counts vs the previous baseline when
     one existed)."""
     context, fresh = extract_all(fresh_root)
-    prev = baseline_metrics(load_baselines(baseline_path), context)
+    prev = baseline_metrics(load_baselines(baseline_path,
+                                           strict=False), context)
     verdict_json = compare(prev, fresh,
                            policies_for_context(context)).to_json() \
         if prev is not None else None

@@ -16,24 +16,36 @@ bump ``SCHEMA_VERSION``.
   bwd_wu/{table}/{layer}/bwd_hbm_margin               (dilate / phase)
   train_scaling/d{devices}/{reduction}/{scaling_efficiency|
                                         no_overlap_efficiency|images_per_s}
+  q8_infer/{table}/{layer}/q8/{roofline_efficiency|cost_us|hbm_bytes}
+  q8_infer/{table}/{layer}/q8/fits_vmem
+  q8_infer/{table}/{layer}/speedup                    (f32 / q8 cost)
+  q8_infer/{table}/min_bw_speedup                     (only when the table
+                                                       has bandwidth-bound
+                                                       layers)
 
 Margins are ratios >= 1.0 by construction of the paper's claims ("tiled
 never slower than whole-plane", "zero-free duality never moves more
 bytes") — the directional invariants ``policy.DEFAULT_POLICIES`` floors at
-1.0 so the gate fails the moment a change flips one.
+1.0 so the gate fails the moment a change flips one.  The q8 speedups are
+the same idea one level up: int8 must never model slower than f32
+(floor 1.0 per layer), and the ISSUE acceptance bar — >= 1.6x on every
+bandwidth-bound ResNet-50 layer — is a hard floor on
+``q8_infer/resnet50/min_bw_speedup``.
 """
 from __future__ import annotations
 
 import json
 import pathlib
 
-SCHEMA_VERSION = 1
+# v2: + the q8_infer bench (BENCH_q8_infer.json, int8 serving speedups)
+SCHEMA_VERSION = 2
 
 # bench-name -> committed artifact filename (repo root)
 BENCH_FILES = {
     "conv_fwd": "BENCH_conv_fwd.json",
     "bwd_wu": "BENCH_bwd_wu.json",
     "train_scaling": "BENCH_train_scaling.json",
+    "q8_infer": "BENCH_q8_infer.json",
 }
 
 _EPS = 1e-12
@@ -93,15 +105,35 @@ def extract_train_scaling(report: dict) -> dict[str, float]:
     return out
 
 
+def extract_q8_infer(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for tname, recs in report["tables"].items():
+        for rec in recs:
+            if rec.get("path") != "direct":
+                continue        # im2col stem: the q8 kernel never runs
+            q = rec["q8"]
+            base = f"q8_infer/{tname}/{rec['layer']}"
+            out[f"{base}/q8/roofline_efficiency"] = q["roofline_efficiency"]
+            out[f"{base}/q8/cost_us"] = q["cost_us"]
+            out[f"{base}/q8/hbm_bytes"] = float(q["hbm_bytes"])
+            out[f"{base}/q8/fits_vmem"] = float(q["fits_vmem"])
+            out[f"{base}/speedup"] = rec["speedup"]
+    for tname, s in report["summary"].items():
+        if s["min_bw_speedup"] is not None:
+            out[f"q8_infer/{tname}/min_bw_speedup"] = s["min_bw_speedup"]
+    return out
+
+
 _EXTRACTORS = {
     "conv_fwd": extract_conv_fwd,
     "bwd_wu": extract_bwd_wu,
     "train_scaling": extract_train_scaling,
+    "q8_infer": extract_q8_infer,
 }
 
 
 def load_reports(root) -> dict[str, dict]:
-    """Read the three bench JSONs under ``root`` -> {bench_name: report}."""
+    """Read the gated bench JSONs under ``root`` -> {bench_name: report}."""
     root = pathlib.Path(root)
     reports = {}
     for bench, fname in BENCH_FILES.items():
@@ -109,7 +141,7 @@ def load_reports(root) -> dict[str, dict]:
         if not path.exists():
             raise FileNotFoundError(
                 f"perfci: missing bench artifact {path} — run the emitting "
-                f"bench (benchmarks.run --dry regenerates all three)")
+                f"bench (benchmarks.run --dry regenerates all of them)")
         reports[bench] = json.loads(path.read_text())
     return reports
 
@@ -125,7 +157,7 @@ def context_key(reports: dict[str, dict]) -> str:
     regressions (the ReFrame analog: references are keyed by system).
     """
     budgets = {reports[b]["vmem_budget"]
-               for b in ("conv_fwd", "bwd_wu") if b in reports}
+               for b in ("conv_fwd", "bwd_wu", "q8_infer") if b in reports}
     if len(budgets) > 1:
         raise ValueError(f"perfci: bench artifacts disagree on vmem_budget "
                          f"{sorted(budgets)} — regenerate them in one run")

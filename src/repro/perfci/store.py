@@ -51,12 +51,16 @@ def provenance(*, command: str = "") -> dict:
     }
 
 
-def load_baselines(path=None) -> dict:
+def load_baselines(path=None, *, strict: bool = True) -> dict:
     path = pathlib.Path(path or BASELINE_PATH)
     if not path.exists():
         return {"schema_version": SCHEMA_VERSION, "contexts": {}}
     doc = json.loads(path.read_text())
     if doc.get("schema_version") != SCHEMA_VERSION:
+        if not strict:
+            # schema bump: every old context's metric IDs are stale by
+            # definition — the refresh path starts from an empty store
+            return {"schema_version": SCHEMA_VERSION, "contexts": {}}
         raise ValueError(
             f"perfci: baseline schema v{doc.get('schema_version')} != "
             f"v{SCHEMA_VERSION} — regenerate with --update-baselines")
@@ -73,8 +77,7 @@ def update_baselines(metrics: dict[str, float], context: str, *, path=None,
     """Write ``metrics`` as the new reference for ``context`` (other
     contexts preserved); returns the written document."""
     path = pathlib.Path(path or BASELINE_PATH)
-    doc = load_baselines(path) if path.exists() else \
-        {"schema_version": SCHEMA_VERSION, "contexts": {}}
+    doc = load_baselines(path, strict=False)
     doc["schema_version"] = SCHEMA_VERSION
     doc.setdefault("contexts", {})[context] = {
         "provenance": provenance(command=command),
@@ -119,6 +122,8 @@ def trajectory_record(context: str, metrics: dict[str, float], *,
                 "train_scaling/d4/fp32/scaling_efficiency"),
             "scaling_d4_int8": metrics.get(
                 "train_scaling/d4/int8/scaling_efficiency"),
+            "q8_min_bw_speedup": metrics.get(
+                "q8_infer/resnet50/min_bw_speedup"),
         },
     }
     if verdict_json is not None:

@@ -110,7 +110,8 @@ def warmup_convs(shapes, *, minibatches=(1,), kinds=("fwd",), mode="tune",
     signature(s) its backward-data plan launches
     (``duality.dual_conv_signatures`` — stride² sub-convs under the default
     phase plan, selected by ``bwd_mode`` / the ``REPRO_BWD_DUALITY`` knob) so
-    the first training step never tunes inline.  ``mode`` follows the knob
+    the first training step never tunes inline; "q8" keys the int8 serving
+    path (pass ``dtype_bytes=1``).  ``mode`` follows the knob
     semantics: "tune" searches+persists on a miss, "cache" only reports what
     is already there.  All new entries are persisted in one atomic write at
     the end.  Returns one report dict per key:

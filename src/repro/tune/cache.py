@@ -22,7 +22,9 @@ import tempfile
 import threading
 import time
 
-CACHE_VERSION = 3     # v3: tiled-wu space (c_blk/rb_q free, ceil-div rb_p)
+CACHE_VERSION = 4     # v4: the "q8" int8-forward kind + its 1-byte-input
+                      #     working-set model (grow-to-budget rb_p)
+                      # v3: tiled-wu space (c_blk/rb_q free, ceil-div rb_p)
                       #     + the "bwd" dual-conv kind
                       # v2: ConvBlocking grew rb_q (RB_Q column blocking)
 _ENV_VAR = "REPRO_TUNE_CACHE"

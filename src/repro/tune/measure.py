@@ -83,6 +83,12 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
         (tiled fwd with c_blk < C, or streams) every extra accumulation pass
         re-reads and rewrites the tile: the multi-pass output term.
 
+    ``kind="q8"`` is the tiled forward with int8 byte accounting: pass a
+    shape dict with ``dtype_bytes=1`` and the input-band and weight-block
+    terms shrink 4x while the output term stays f32 (the §II-K asymmetry —
+    which is exactly why the modeled speedup lands near the paper's 1.6x on
+    bandwidth-bound layers instead of 4x).
+
     ``kind="wu"`` models the update pass instead: the tiled kernel streams
     an input row band *and* a dO pixel tile on every step of its
     ``(K_b, C_b, N, P_b, Q_b)`` grid and writes each (r, s, C_blk, K_blk)
@@ -107,7 +113,7 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
                            p=p, q=q, hp=hp, wp=wp, n=n, blk=blk,
                            dtype_bytes=dtype_bytes, whole_plane=whole_plane)
 
-    tiled_fwd = kind in ("fwd", "bwd") and not whole_plane
+    tiled_fwd = kind in ("fwd", "bwd", "q8") and not whole_plane
     if whole_plane:
         c_blk, rb_q = c, q
     elif kind == "streams":
@@ -151,7 +157,7 @@ def conv_traffic(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
         else:
             x_f = _refetches([pos["n"], pos["c"]], ordered)
     w_bytes = r * s * c_blk * blk.k_blk * dtype_bytes
-    o_bytes = rb_p * rb_q * blk.k_blk * 4           # f32 accumulator tile
+    o_bytes = rb_p * rb_q * blk.k_blk * 4   # f32 tile (q8 output stays f32)
     w_f = _refetches([pos["k"], pos["c"]], ordered)
     o_f = _refetches([pos["n"], pos["k"], pos["p"]], ordered)
     revisit = max(extents[3], 1)
@@ -348,6 +354,14 @@ def measure_conv_us(shape: dict, blk: ConvBlocking, *, kind: str = "fwd",
             b_p=blk.rb_p, k_blk=blk.k_blk, c_blk=blk.c_blk, rb_q=blk.rb_q,
             whole_plane=False))
         wt = do
+    elif kind == "q8":
+        from repro.kernels.conv2d_q8 import conv2d_q8, quantize_conv_inputs
+        x_q, w_q, sx, sw = quantize_conv_inputs(x, wt)
+        fn = jax.jit(lambda x, wt: conv2d_q8(
+            x, wt, x_scale=sx, w_scale=sw, stride=stride, padding=padding,
+            rb_p=blk.rb_p, k_blk=blk.k_blk, c_blk=blk.c_blk, rb_q=blk.rb_q,
+            order=blk.order, whole_plane=False))
+        x, wt = x_q, w_q
     else:                       # "fwd" and "bwd" (the dual IS a fwd launch)
         fn = jax.jit(lambda x, wt: conv2d_direct(
             x, wt, stride=stride, padding=padding, rb_p=blk.rb_p,

@@ -25,6 +25,11 @@ do worse than.  Kinds:
             grid order is fixed (K_b, C_b, N, P_b, Q_b), so order is not a
             coordinate
   "streams" conv2d_streams: rb_p/k_blk/c_blk/order free; whole-plane
+  "q8"      conv2d_q8 tiled int8 forward: the same five coordinates as
+            "fwd" but priced at 1 byte/element input-side (pass
+            ``dtype_bytes=1``) — the 4x-smaller band admits taller rb_p
+            under the same budget, so its candidate pool is genuinely
+            different from the f32 space (own cache namespace)
 """
 from __future__ import annotations
 
@@ -76,7 +81,7 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
                     kind: str = "fwd",
                     vmem_budget: int = VMEM_BUDGET) -> list[ConvBlocking]:
     """Feasible blockings, analytic seed first, deduplicated, budget-capped."""
-    assert kind in ("fwd", "bwd", "wu", "streams"), kind
+    assert kind in ("fwd", "bwd", "wu", "streams", "q8"), kind
     p = out_dim(h, r, stride, padding)
     q = out_dim(w, s, stride, padding)
     whole = kind == "streams"       # only streams keeps the plane resident
@@ -96,11 +101,12 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
         orders = ORDERS
         rb_qs = [q]
     else:
-        # fwd/bwd: full-C single-pass first, then lane-aligned C_b accumulation
+        # fwd/bwd/q8: full-C single-pass first, then lane-aligned C_b blocks
         c_blocks = sorted({c} | set(_feature_blocks(c)), reverse=True)
         orders = ORDERS
         rb_qs = _rb_q_candidates(max(q, 1))
     rbs = _rb_candidates(max(p, 1), require_divisor=False)
+    ws_kind = kind if kind in ("wu", "q8") else "fwd"
 
     pool: list[ConvBlocking] = []
     seen = {(seed.rb_p, seed.k_blk, seed.c_blk, seed.order,
@@ -113,8 +119,7 @@ def conv_candidates(*, h: int, w: int, c: int, k: int, r: int, s: int,
                         h=h, w=w, c=c, k_blk=kb, r=r, s=s, q=q, rb_p=rb,
                         padding=padding, dtype_bytes=dtype_bytes,
                         stride=stride, c_blk=cb, rb_q=rq,
-                        whole_plane=whole,
-                        kind="wu" if kind == "wu" else "fwd")
+                        whole_plane=whole, kind=ws_kind)
                     if ws > vmem_budget:
                         continue
                     for order in orders:

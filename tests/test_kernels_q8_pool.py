@@ -1,12 +1,23 @@
-"""Quantized conv kernel (§II-K as a kernel) + pooling kernel vs oracles."""
+"""Quantized conv kernel (§II-K as a kernel) + pooling kernel vs oracles.
+
+The tiled-q8 sections pin the PR-7 retile: tiled ≡ whole-plane bit-exact
+(int32 accumulation is associative and both paths share one premultiplied
+f32 dequant epilogue), q8 vs f32 within the analytic quantization bound
+R·S·C·sx·sw·127.25 per element, and the 224x224 7x7 stem schedulable under
+a 1 MiB budget with an H·W-independent working set (the int8 blocking
+dividend).  "Both backends" = interpret-mode eager AND under ``jax.jit``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.configs.shapes import STEM_CONV, STEM_CONV_HALF
+from repro.core.blocking import conv_blocking_analytic, conv_working_set
 from repro.kernels import ref
 from repro.kernels.conv2d_q8 import conv2d_q8, quantize_conv_inputs
 from repro.kernels.pool2d import maxpool2d
+from repro.tune.space import out_dim
 
 
 @pytest.mark.parametrize("case", [
@@ -50,6 +61,111 @@ def test_conv2d_q8_relu_epilogue(rng):
     out = conv2d_q8(xq, wq, x_scale=sx, w_scale=sw, stride=1, padding=1,
                     relu=True, rb_p=4, interpret=True)
     assert float(out.min()) >= 0.0
+
+
+# -- tiled q8: band streaming, C/K blocking, ceil-div tails ------------------
+
+TILED_Q8_CASES = [
+    # n, h, w, c, k, r, stride, pad, blocking kwargs
+    (2, 12, 12, 16, 16, 3, 1, 1, dict(rb_p=5, rb_q=5, c_blk=8)),
+    (1, 13, 13, 8, 16, 3, 2, 1, dict(rb_p=3, rb_q=4, k_blk=8)),
+    (1, 11, 11, 8, 24, 1, 1, 0, dict(rb_p=4, rb_q=3, k_blk=8)),
+    (1, 24, 24, 8, 16, 7, 2, 3, dict(rb_p=4, rb_q=6, c_blk=8)),
+    (1, 10, 10, 16, 8, 3, 1, 1, dict(rb_p=4, rb_q=10, c_blk=8,
+                                     order="npkc")),
+]
+
+
+def _q8_case_data(rng, case):
+    n, h, w, c, k, r, stride, pad, kw = case
+    x = jnp.asarray(rng.standard_normal((n, h, w, c)), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1, jnp.float32)
+    return (x, wt, quantize_conv_inputs(x, wt),
+            dict(stride=stride, padding=pad), kw)
+
+
+@pytest.mark.parametrize("jit", [False, True], ids=["eager", "jit"])
+@pytest.mark.parametrize("case", TILED_Q8_CASES)
+def test_conv2d_q8_tiled_equals_whole_plane_bitexact(rng, case, jit):
+    """The retile must not change a single output bit: int32 accumulation
+    is associative, and both kernels apply the identical premultiplied-deq
+    f32 epilogue — on the eager interpret path AND under jax.jit."""
+    x, wt, (xq, wq, sx, sw), conv_kw, blk_kw = _q8_case_data(rng, case)
+
+    def run(whole):
+        fn = lambda a, b: conv2d_q8(a, b, x_scale=sx, w_scale=sw, **conv_kw,
+                                    **blk_kw, whole_plane=whole,
+                                    interpret=True)
+        return (jax.jit(fn) if jit else fn)(xq, wq)
+
+    np.testing.assert_array_equal(np.asarray(run(False)),
+                                  np.asarray(run(True)))
+
+
+@pytest.mark.parametrize("jit", [False, True], ids=["eager", "jit"])
+@pytest.mark.parametrize("case", TILED_Q8_CASES)
+def test_conv2d_q8_within_analytic_bound(rng, case, jit):
+    """|q8 - f32| <= R*S*C*sx*sw_k*127.25 per element: each product term
+    errs by at most |x̂||ŵ-w| + |w||x̂-x| <= 127*sx*sw (plus f32 slop),
+    summed over the R*S*C accumulation chain."""
+    x, wt, (xq, wq, sx, sw), conv_kw, blk_kw = _q8_case_data(rng, case)
+    r, _, c, _ = wt.shape
+    fn = lambda a, b: conv2d_q8(a, b, x_scale=sx, w_scale=sw, **conv_kw,
+                                **blk_kw, whole_plane=False, interpret=True)
+    out = np.asarray((jax.jit(fn) if jit else fn)(xq, wq))
+    exp = np.asarray(ref.conv2d(x, wt, **conv_kw))
+    bound = r * r * c * float(sx) * np.asarray(sw, np.float32) * 127.25
+    assert np.all(np.abs(out - exp) <= bound), \
+        float(np.max(np.abs(out - exp) / bound))
+
+
+def test_q8_stem_tiled_under_pressure_budget(rng):
+    """The serving acceptance bar: the 224x224 7x7 stride-2 stem is
+    un-schedulable whole-plane under the 1 MiB CI budget, but the int8
+    band fits with room to grow — and the tiled working set is independent
+    of H*W (same band for the 224 and 112 image)."""
+    sh = STEM_CONV
+    blk = conv_blocking_analytic(
+        h=sh["h"], w=sh["w"], c=sh["c"], k=sh["k"], r=sh["r"], s=sh["s"],
+        stride=sh["stride"], padding=sh["padding"], dtype_bytes=1,
+        kind="q8")
+
+    def ws(shape, whole):
+        q = out_dim(shape["w"], shape["s"], shape["stride"],
+                    shape["padding"])
+        return conv_working_set(
+            h=shape["h"], w=shape["w"], c=shape["c"], k_blk=blk.k_blk,
+            r=shape["r"], s=shape["s"], q=q, rb_p=blk.rb_p,
+            padding=shape["padding"], stride=shape["stride"],
+            c_blk=None if whole else blk.c_blk,
+            rb_q=None if whole else 16, whole_plane=whole,
+            dtype_bytes=1, kind="q8")
+
+    small_budget = 1 << 20            # the CI q8-smoke budget
+    assert ws(STEM_CONV, whole=True) > small_budget        # legacy: too big
+    assert ws(STEM_CONV, whole=False) <= small_budget      # tiled: fits
+    assert ws(STEM_CONV, whole=False) == ws(STEM_CONV_HALF, whole=False)
+    # the int8 band is 4x smaller than the f32 one, so the same budget
+    # admits a taller row block than the f32 blocking gets
+    f32_blk = conv_blocking_analytic(
+        h=sh["h"], w=sh["w"], c=sh["c"], k=sh["k"], r=sh["r"], s=sh["s"],
+        stride=sh["stride"], padding=sh["padding"], dtype_bytes=4)
+    assert blk.rb_p >= f32_blk.rb_p
+
+    x = jnp.asarray(rng.standard_normal(
+        (sh["n"], sh["h"], sh["w"], sh["c"])), jnp.float32)
+    wt = jnp.asarray(rng.standard_normal(
+        (sh["r"], sh["s"], sh["c"], sh["k"])) * 0.1, jnp.float32)
+    xq, wq, sx, sw = quantize_conv_inputs(x, wt)
+    out = conv2d_q8(xq, wq, x_scale=sx, w_scale=sw, stride=sh["stride"],
+                    padding=sh["padding"], rb_p=blk.rb_p, rb_q=16,
+                    c_blk=sh["c"], whole_plane=False, interpret=True)
+    exp = np.asarray(ref.conv2d(x, wt, stride=sh["stride"],
+                                padding=sh["padding"]))
+    assert out.shape == (1, 112, 112, sh["k"])
+    bound = sh["r"] * sh["s"] * sh["c"] * float(sx) \
+        * np.asarray(sw, np.float32) * 127.25
+    assert np.all(np.abs(np.asarray(out) - exp) <= bound)
 
 
 @pytest.mark.parametrize("window,stride,pad,h", [

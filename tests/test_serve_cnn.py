@@ -141,6 +141,83 @@ def test_warmup_compiles_every_bucket(rng):
         assert eng.aot_executable(b) is eng._compiled[b]
 
 
+# -- quantized serving (§II-K end to end) ------------------------------------
+
+def _tiny_q8(impl="interpret"):
+    nl = resnet50(num_classes=10, stages=(1, 1, 1, 1))
+    m = GxM(nl, num_classes=10, impl=impl, quantized=True)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def test_quantized_engine_top1_stable_vs_f32(rng):
+    """A quantized=True engine on the interpret backend (the real int8
+    Pallas kernels) must keep the fp32 top-1 on a fixed batch, and stay
+    within the calibration error band on the logits."""
+    m32, params = _tiny()
+    m32.impl = "interpret"
+    x = rng.standard_normal((4, 32, 32, 3)).astype(np.float32)
+    ref_logits = np.asarray(m32.forward(params, jnp.asarray(x), train=False))
+
+    mq, _ = _tiny_q8()          # same init seed -> identical f32 weights
+    eng = _engine(mq, params, buckets=(4,))
+    assert eng.quantized
+    report = eng.warmup(autotune="off")
+    assert report["quantized"] and eng.qparams is not None
+    got = np.asarray(eng.infer(x))
+    np.testing.assert_array_equal(np.argmax(got, axis=-1),
+                                  np.argmax(ref_logits, axis=-1))
+    rel = np.max(np.abs(got - ref_logits)) / (np.max(np.abs(ref_logits))
+                                              + 1e-9)
+    assert rel < 0.1, rel
+
+
+def test_quantized_padded_lanes_invisible(rng):
+    """Pad-to-bucket on the q8 path: junk in the padded lane must not
+    perturb a single bit of the real lanes (per-tensor activation scales
+    are calibration constants, not batch statistics)."""
+    mq, params = _tiny_q8()
+    eng = _engine(mq, params, buckets=(4,))
+    eng.warmup(autotune="off")
+    x = rng.standard_normal((3, 32, 32, 3)).astype(np.float32)
+    got = np.asarray(eng.infer(x))                   # pads 3 -> bucket 4
+    fn = eng.aot_executable(4)
+    junk = 100 * rng.standard_normal((1, 32, 32, 3)).astype(np.float32)
+    with_zeros = fn(eng._run_params, jnp.asarray(np.concatenate([x, 0 * junk])))
+    with_junk = fn(eng._run_params, jnp.asarray(np.concatenate([x, junk])))
+    np.testing.assert_array_equal(np.asarray(with_zeros)[:3],
+                                  np.asarray(with_junk)[:3])
+    np.testing.assert_array_equal(got, np.asarray(with_zeros)[:3])
+
+
+def test_calibration_deterministic_for_fixed_seed():
+    """Same params + same synthetic calibration seed -> bit-equal scales
+    (pure max-reduction over rng-seeded batches); a different seed must
+    actually change the data the scales see."""
+    mq, params = _tiny_q8(impl=None)   # calibration runs the f32 xla path
+    a = _engine(mq, params, buckets=(2,)).calibrate(batches=2, batch=2,
+                                                    seed=0)
+    b = _engine(mq, params, buckets=(2,)).calibrate(batches=2, batch=2,
+                                                    seed=0)
+    assert set(a) == set(b) and len(a) > 0
+    for name in a:
+        np.testing.assert_array_equal(np.asarray(a[name]),
+                                      np.asarray(b[name]))
+    c = _engine(mq, params, buckets=(2,)).calibrate(batches=2, batch=2,
+                                                    seed=1)
+    assert any(float(a[n]) != float(c[n]) for n in a)
+
+
+def test_quantized_engine_train_guard():
+    """The quantized params tree is inference-only: the executor must
+    refuse to run a training forward over w_q leaves."""
+    mq, params = _tiny_q8(impl=None)
+    eng = _engine(mq, params, buckets=(2,))
+    eng.calibrate(batches=1, batch=2, seed=0)
+    x = jnp.zeros((2, 32, 32, 3), jnp.float32)
+    with pytest.raises(ValueError, match="inference-only"):
+        mq.forward(eng.qparams, x, train=True)
+
+
 # -- continuous-batching scheduler -------------------------------------------
 
 def test_server_serves_all_requests_and_counts_padding(rng):
