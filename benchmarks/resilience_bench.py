@@ -1,0 +1,200 @@
+"""Resilience bench — goodput under canned fault schedules (DESIGN.md §14).
+
+Replays three fixed fault schedules through the real ``ResilientLoop`` +
+real checkpoint I/O (temp dir) + the real ``fold_residual`` elastic path,
+with a cheap deterministic step function standing in for the DP CNN step
+and ``chaos.SimClock`` supplying time — so every number in
+``BENCH_resilience.json`` is a pure function of the schedule:
+
+  fault_free     no events — the goodput identity anchor (exactly 1.0)
+  reference      the ISSUE acceptance schedule: a straggler, a mid-run host
+                 death, a corrupted newest checkpoint + step fault (the
+                 walk-back restore), and a transient save outage — the
+                 perf-gate floors goodput here at 0.9
+  restart_heavy  repeated step faults off checkpoint boundaries plus a torn
+                 (mid-write crash) checkpoint — the replay-cost profile
+
+Goodput is simulated-time ``t(fault_free) / t(schedule)``: successful steps
+charge the slowest alive host's duration, collective timeouts and injected
+faults charge their modeled cost, and backoff sleeps charge through the
+SimClock.  ``recovery_overhead_steps`` counts replayed work
+(``steps_run - n_steps``), and every elastic fold checks that the summed
+residual is bit-equal before and after (``fold_mass_conserved`` — the
+perf-gate floors it at 1.0; residuals are integer-valued so float32 sums
+are exact).  The real-model counterpart — the DP CNN step under chaos on
+fake devices — runs in ``tests/test_chaos.py``; this bench is the
+committed, deterministic artifact the gate reads.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+
+import numpy as np
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_resilience.json"
+
+N_STEPS = 400
+N_HOSTS = 4
+STEP_S = 1.0
+COLLECTIVE_TIMEOUT_S = 2.0
+CKPT_EVERY = 10
+POLICY_EVERY = 5
+SHAPE = (4, 4)
+
+
+def schedules() -> dict[str, tuple]:
+    from repro.train import chaos as cz
+    return {
+        "fault_free": (),
+        "reference": (
+            cz.SlowHost(50, "host2", factor=3.0),
+            cz.HostDeath(200, "host3"),
+            cz.FlakySaves(240, times=2),
+            cz.CorruptCheckpoint(300),
+            cz.StepFault(305),
+        ),
+        "restart_heavy": (
+            cz.StepFault(63),
+            cz.TornCheckpoint(150),
+            cz.StepFault(156),
+            cz.StepFault(333),
+        ),
+    }
+
+
+class _CursorData:
+    """batch = f(step): the pure data-cursor contract of data/pipeline.py."""
+
+    def batch_at(self, step: int) -> dict:
+        return {"step": np.float32(step)}
+
+
+def make_state(n_hosts: int) -> dict:
+    rng = np.random.default_rng(np.random.SeedSequence([0x5E51, n_hosts]))
+    return {
+        "params": rng.standard_normal(SHAPE).astype(np.float32),
+        # integer-valued so elastic-fold sums are exact in float32
+        "residual": rng.integers(-50, 50, size=(n_hosts, *SHAPE))
+        .astype(np.float32),
+    }
+
+
+def make_step_fn(n_hosts: int):
+    def step_fn(state, batch):
+        params = state["params"] - np.float32(1e-3) * (batch["step"] + 1.0)
+        residual = state["residual"] + np.float32(1.0)
+        return ({"params": params, "residual": residual},
+                {"loss": float(np.abs(params).mean())})
+    return step_fn
+
+
+def make_elastic_fn(fold_log: list):
+    """elastic_fn(state, alive): fold the per-shard residual onto the
+    narrower fleet (the DP CNN path's ``reshard_cnn_state`` analog) and
+    record exact mass conservation."""
+    from repro.optim.compress import fold_residual
+
+    def elastic_fn(state, alive):
+        new = len(alive)
+        before = state["residual"].sum(axis=0)
+        folded = np.asarray(fold_residual(state["residual"], new))
+        after = folded.sum(axis=0)
+        fold_log.append({
+            "from": int(state["residual"].shape[0]), "to": new,
+            "mass_conserved": float(np.array_equal(before, after)),
+        })
+        return ({"params": state["params"], "residual": folded},
+                make_step_fn(new))
+    return elastic_fn
+
+
+def replay(name: str, events: tuple) -> dict:
+    from repro.train import chaos as cz
+    from repro.train.fault_tolerance import ResilientLoop
+    hosts = [f"host{i}" for i in range(N_HOSTS)]
+    fold_log: list = []
+    with tempfile.TemporaryDirectory(prefix="repro-resilience-") as d:
+        eng = cz.ChaosEngine(cz.ChaosSchedule(events), hosts=hosts,
+                             ckpt_dir=d, step_s=STEP_S,
+                             collective_timeout_s=COLLECTIVE_TIMEOUT_S)
+        loop = ResilientLoop(
+            step_fn=make_step_fn(N_HOSTS), state=make_state(N_HOSTS),
+            data=_CursorData(), ckpt_dir=d, ckpt_every=CKPT_EVERY,
+            policy_every=POLICY_EVERY, min_hosts=2, chaos=eng,
+            heartbeat=eng.make_heartbeat(),
+            elastic_fn=make_elastic_fn(fold_log))
+        loop.run(N_STEPS)
+        sim_time = eng.clock.time()
+    summary = loop.resilience_summary()
+    fault_free_time = N_STEPS * STEP_S
+    return {
+        "name": name,
+        "n_steps": N_STEPS,
+        "sim_time_s": round(sim_time, 6),
+        "fault_free_time_s": fault_free_time,
+        "goodput_ratio": round(fault_free_time / sim_time, 6),
+        "recovery_overhead_steps": summary["steps_run"] - N_STEPS,
+        "lost_steps": summary["lost_steps"],
+        "restarts": summary["restarts"],
+        "evictions": summary["evictions"],
+        "io_retries": summary["io_retries"],
+        "n_hosts_final": summary["n_hosts"],
+        "fold_mass_conserved": min((f["mass_conserved"] for f in fold_log),
+                                   default=1.0),
+        "folds": fold_log,
+        # sanitized event log (kinds/steps only: no host paths, no reprs)
+        "events": [{"kind": e["kind"], "step": e.get("step"),
+                    "t": round(e["t"], 6)} for e in loop.events],
+    }
+
+
+def fold_table() -> list[dict]:
+    """Standalone elastic-fold conservation: divisible (4 -> 2) and
+    non-divisor collapse (4 -> 3), exact in float32 by integer values."""
+    from repro.optim.compress import fold_residual
+    rng = np.random.default_rng(np.random.SeedSequence([0xF01D]))
+    r = rng.integers(-100, 100, size=(4, 8, 8)).astype(np.float32)
+    rows = []
+    for new in (2, 3):
+        folded = np.asarray(fold_residual(r, new))
+        rows.append({
+            "from": 4, "to": new,
+            "mass_conserved": float(np.array_equal(r.sum(axis=0),
+                                                   folded.sum(axis=0))),
+        })
+    return rows
+
+
+def build_report() -> dict:
+    return {
+        "bench": "resilience",
+        "model": {"n_steps": N_STEPS, "n_hosts": N_HOSTS, "step_s": STEP_S,
+                  "collective_timeout_s": COLLECTIVE_TIMEOUT_S,
+                  "ckpt_every": CKPT_EVERY, "policy_every": POLICY_EVERY},
+        "schedules": [replay(name, ev) for name, ev in schedules().items()],
+        "fold": fold_table(),
+    }
+
+
+def main(argv=None) -> dict:
+    from benchmarks.common import bench_out_path, emit
+    report = build_report()
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    for r in report["schedules"]:
+        emit(f"resilience_{r['name']}", 0.0,
+             f"goodput={r['goodput_ratio']:.4f} "
+             f"overhead_steps={r['recovery_overhead_steps']} "
+             f"evictions={r['evictions']}")
+    for f in report["fold"]:
+        emit(f"resilience_fold_{f['from']}to{f['to']}", 0.0,
+             f"mass_conserved={f['mass_conserved']:.0f}")
+    print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

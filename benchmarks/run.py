@@ -16,6 +16,9 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   §III multi-node  -> train_scaling_bench   (DP training: devices × psum
                                              wire format ->
                                              BENCH_train_scaling.json)
+  DESIGN.md §14    -> resilience_bench      (goodput under canned fault
+                                             schedules ->
+                                             BENCH_resilience.json)
   DESIGN.md §7     -> moe_streams_bench     (streams GMM vs dense loop)
   beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
 
@@ -52,8 +55,8 @@ import traceback
 from benchmarks import (autotune_bench, bwd_wu_layers, conv_fwd_bench,
                         fusion_bench, inception_bench, lm_roofline_table,
                         moe_streams_bench, reduced_precision_bench,
-                        resnet50_layers, scaling_bench, serve_cnn_bench,
-                        streams_bench, train_scaling_bench)
+                        resilience_bench, resnet50_layers, scaling_bench,
+                        serve_cnn_bench, streams_bench, train_scaling_bench)
 
 MODULES = [
     ("conv_fwd_bench", conv_fwd_bench),
@@ -69,6 +72,7 @@ MODULES = [
     ("autotune_bench", autotune_bench),
     ("serve_cnn_bench", serve_cnn_bench),
     ("train_scaling_bench", train_scaling_bench),
+    ("resilience_bench", resilience_bench),
 ]
 
 # the fast-path tables that still *run* in --dry smoke mode (the three
@@ -82,6 +86,7 @@ DRY_CALLS = [
     ("bwd_wu_layers", lambda: bwd_wu_layers.main([])),
     ("train_scaling_bench", lambda: train_scaling_bench.main([])),
     ("reduced_precision_q8", lambda: reduced_precision_bench.main_q8()),
+    ("resilience_bench", lambda: resilience_bench.main([])),
 ]
 
 

@@ -1,1 +1,2 @@
-from repro.data.pipeline import SyntheticLMData, TokenFileData, make_pipeline  # noqa: F401
+from repro.data.pipeline import (SyntheticImageData, SyntheticLMData,  # noqa: F401
+                                 TokenFileData, make_pipeline)

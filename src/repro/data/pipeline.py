@@ -45,6 +45,40 @@ class SyntheticLMData:
 
 
 @dataclasses.dataclass
+class SyntheticImageData:
+    """NHWC image batches in the GxM contract ({"image", "label"}), same
+    pure ``(seed, step)`` -> batch contract as the LM pipelines — the data
+    cursor the chaos-recovery tests replay through the DP CNN step."""
+    hw: int
+    n_classes: int
+    global_batch: int
+    channels: int = 3
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        assert self.global_batch % self.n_shards == 0
+        local = self.global_batch // self.n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        labels = rng.integers(self.n_classes,
+                              size=(local,)).astype(np.int32)
+        x = rng.standard_normal(
+            (local, self.hw, self.hw, self.channels)).astype(np.float32)
+        # class-dependent mean shift: learnable signal for convergence tests
+        x += (labels[:, None, None, None].astype(np.float32)
+              / self.n_classes - 0.5)
+        return {"image": x, "label": labels}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+@dataclasses.dataclass
 class TokenFileData:
     """Memory-mapped flat token file (uint16/uint32), deterministic chunk
     shuffle per epoch; same (seed, step) -> batch contract."""

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -76,6 +77,13 @@ def main(argv=None):
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--data-path", default=None)
+    ap.add_argument("--chaos-seed", type=int,
+                    default=(int(os.environ["REPRO_CHAOS"])
+                             if os.environ.get("REPRO_CHAOS") else None),
+                    help="inject a seeded fault schedule (train/chaos.py) "
+                         "against a simulated 4-host fleet; also settable "
+                         "via REPRO_CHAOS=<seed>")
+    ap.add_argument("--chaos-hosts", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -92,13 +100,27 @@ def main(argv=None):
                          global_batch=args.global_batch,
                          path=args.data_path)
 
-    start = ckpt_lib.latest_step(args.ckpt_dir) or 0
+    # walk-back resume: a corrupt or torn newest checkpoint degrades to the
+    # newest verifiable one instead of bricking the run
+    state, start = ckpt_lib.restore_latest(args.ckpt_dir, state)
     if start:
         print(f"resuming from checkpoint step {start}")
-        state = ckpt_lib.restore(args.ckpt_dir, start, state)
+
+    chaos = None
+    if args.chaos_seed is not None:
+        from repro.train.chaos import ChaosEngine, ChaosSchedule
+        hosts = [f"host{i}" for i in range(args.chaos_hosts)]
+        sched = ChaosSchedule.generate(args.chaos_seed, n_steps=args.steps,
+                                       hosts=hosts)
+        chaos = ChaosEngine(sched, hosts=hosts, ckpt_dir=args.ckpt_dir)
+        print(f"chaos: seed={args.chaos_seed} "
+              f"events={[type(e).__name__ for e in sched.events]}")
 
     loop = ResilientLoop(step_fn=run_step, state=state, data=data,
-                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         policy_every=5, chaos=chaos,
+                         heartbeat=(chaos.make_heartbeat()
+                                    if chaos is not None else None))
     t0 = time.time()
     loop.run(args.steps, start_step=start)
     dt = time.time() - t0
@@ -106,6 +128,7 @@ def main(argv=None):
     for m in loop.metrics_log[:3] + loop.metrics_log[-3:]:
         print(json.dumps(m))
     print(f"tokens/s={toks/dt:.0f}  restarts={loop.restarts}")
+    print("resilience " + json.dumps(loop.resilience_summary()))
     return loop
 
 

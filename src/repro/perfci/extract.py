@@ -22,6 +22,10 @@ bump ``SCHEMA_VERSION``.
   q8_infer/{table}/min_bw_speedup                     (only when the table
                                                        has bandwidth-bound
                                                        layers)
+  resilience/{schedule}/{goodput_ratio|recovery_overhead_steps|lost_steps|
+                         restarts|evictions|fold_mass_conserved}
+  resilience/fold/{old}to{new}/mass_conserved         (elastic residual
+                                                       fold, exact)
 
 Margins are ratios >= 1.0 by construction of the paper's claims ("tiled
 never slower than whole-plane", "zero-free duality never moves more
@@ -38,7 +42,8 @@ import json
 import pathlib
 
 # v2: + the q8_infer bench (BENCH_q8_infer.json, int8 serving speedups)
-SCHEMA_VERSION = 2
+# v3: + the resilience bench (BENCH_resilience.json, goodput under faults)
+SCHEMA_VERSION = 3
 
 # bench-name -> committed artifact filename (repo root)
 BENCH_FILES = {
@@ -46,6 +51,7 @@ BENCH_FILES = {
     "bwd_wu": "BENCH_bwd_wu.json",
     "train_scaling": "BENCH_train_scaling.json",
     "q8_infer": "BENCH_q8_infer.json",
+    "resilience": "BENCH_resilience.json",
 }
 
 _EPS = 1e-12
@@ -124,11 +130,29 @@ def extract_q8_infer(report: dict) -> dict[str, float]:
     return out
 
 
+def extract_resilience(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for r in report["schedules"]:
+        base = f"resilience/{r['name']}"
+        out[f"{base}/goodput_ratio"] = r["goodput_ratio"]
+        out[f"{base}/recovery_overhead_steps"] = \
+            float(r["recovery_overhead_steps"])
+        out[f"{base}/lost_steps"] = float(r["lost_steps"])
+        out[f"{base}/restarts"] = float(r["restarts"])
+        out[f"{base}/evictions"] = float(r["evictions"])
+        out[f"{base}/fold_mass_conserved"] = r["fold_mass_conserved"]
+    for f in report["fold"]:
+        out[f"resilience/fold/{f['from']}to{f['to']}/mass_conserved"] = \
+            f["mass_conserved"]
+    return out
+
+
 _EXTRACTORS = {
     "conv_fwd": extract_conv_fwd,
     "bwd_wu": extract_bwd_wu,
     "train_scaling": extract_train_scaling,
     "q8_infer": extract_q8_infer,
+    "resilience": extract_resilience,
 }
 
 
@@ -156,6 +180,8 @@ def context_key(reports: dict[str, dict]) -> str:
     a 16 MiB baseline against a 1 MiB fresh run would gate noise, not
     regressions (the ReFrame analog: references are keyed by system).
     """
+    # (train_scaling and resilience carry no vmem stamp: the scaling model
+    # and the fault-schedule replay are budget-independent by construction)
     budgets = {reports[b]["vmem_budget"]
                for b in ("conv_fwd", "bwd_wu", "q8_infer") if b in reports}
     if len(budgets) > 1:

@@ -63,6 +63,25 @@ DEFAULT_POLICIES: tuple[Tolerance, ...] = (
     Tolerance("train_scaling/*/scaling_efficiency", "higher", 0.02),
     Tolerance("train_scaling/*/no_overlap_efficiency", "higher", 0.02),
     Tolerance("train_scaling/*/images_per_s", "higher", 0.02),
+    # the PR-8 self-healing bars: a fault-free replay is the goodput
+    # identity; the reference schedule (straggler + host death + corrupt
+    # checkpoint) must keep >= 90% of fault-free throughput; and the
+    # elastic residual fold must never lose gradient mass
+    Tolerance("resilience/fault_free/goodput_ratio", "higher", 0.0,
+              floor=1.0, ceiling=1.0, note="identity anchor"),
+    Tolerance("resilience/reference/goodput_ratio", "higher", 0.02,
+              floor=0.9, note="ISSUE hard floor: goodput >= 0.9 under the "
+                              "reference fault schedule"),
+    Tolerance("resilience/*/goodput_ratio", "higher", 0.02),
+    Tolerance("resilience/*/*mass_conserved", "higher", 0.0, floor=1.0,
+              ceiling=1.0, note="ISSUE hard floor: zero lost gradient mass "
+                                "on elastic fold"),
+    Tolerance("resilience/*/recovery_overhead_steps", "lower", 0.0),
+    Tolerance("resilience/*/lost_steps", "lower", 0.0),
+    # restart/eviction counts are schedule facts: any change is a behavior
+    # change in the recovery policy, not noise
+    Tolerance("resilience/*", "both", 0.0, note="deterministic replay: "
+                                                "exact match"),
     # the PR-7 acceptance bar: int8 serving >= 1.6x on every
     # bandwidth-bound ResNet-50 layer (BENCH_q8_infer.json summary)
     Tolerance("q8_infer/resnet50/min_bw_speedup", "higher", 0.02, floor=1.6,

@@ -124,6 +124,8 @@ def trajectory_record(context: str, metrics: dict[str, float], *,
                 "train_scaling/d4/int8/scaling_efficiency"),
             "q8_min_bw_speedup": metrics.get(
                 "q8_infer/resnet50/min_bw_speedup"),
+            "resilience_goodput": metrics.get(
+                "resilience/reference/goodput_ratio"),
         },
     }
     if verdict_json is not None:

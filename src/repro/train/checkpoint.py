@@ -11,7 +11,14 @@ Layout:  <dir>/step_<N>/manifest.json + one .npy per leaf.
     mesh B (different data/model parallelism) — the re-scale path.  State
     whose *shape* depends on the mesh width (the DP CNN step's per-shard
     int8 residual) goes through ``fault_tolerance.elastic_reshard_cnn``,
-    which folds before placing.
+    which folds before placing;
+  * durable:  ``valid_steps`` scans the directory and reports only the
+    checkpoints that verify end to end (manifest parses, every leaf file
+    present, CRC32 matches), and ``restore_latest`` walks *back* from the
+    newest step until one restores cleanly — a corrupt or partial newest
+    checkpoint degrades to the newest verifiable one instead of bricking
+    recovery (DESIGN.md §14).  Stale ``.tmp-*`` directories (a crash mid
+    ``save``) are invisible to every reader by construction.
 """
 from __future__ import annotations
 
@@ -92,23 +99,67 @@ class AsyncCheckpointer:
             self._thread.join()
             self._thread = None
         if self.last_error is not None:
-            raise self.last_error
+            # hand the error over exactly once: a failed background save
+            # must not poison every later save/wait with a stale exception
+            err, self.last_error = self.last_error, None
+            raise err
+
+
+def all_steps(ckpt_dir) -> list[int]:
+    """Every ``step_<N>`` directory under ``ckpt_dir``, ascending —
+    *without* any integrity claim (see ``valid_steps``).  ``.tmp-*``
+    write-in-progress directories are never listed."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    return sorted(int(m.group(1)) for p in ckpt_dir.iterdir()
+                  if (m := re.fullmatch(r"step_(\d+)", p.name)))
 
 
 def latest_step(ckpt_dir) -> int | None:
-    ckpt_dir = pathlib.Path(ckpt_dir)
-    if not ckpt_dir.exists():
-        return None
-    steps = [int(m.group(1)) for p in ckpt_dir.iterdir()
-             if (m := re.fullmatch(r"step_(\d+)", p.name))]
-    return max(steps) if steps else None
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def verify_checkpoint(ckpt_dir, step: int, *, deep: bool = True) -> bool:
+    """True iff the checkpoint at ``step`` restores cleanly: the manifest
+    parses, every leaf file exists and (``deep``) loads with its recorded
+    shape/dtype and matching CRC32.  Never raises."""
+    path = pathlib.Path(ckpt_dir) / f"step_{step}"
+    try:
+        manifest = json.loads((path / "manifest.json").read_text())
+        for key, meta in manifest["leaves"].items():
+            f = path / meta["file"]
+            if not f.exists():
+                return False
+            if deep:
+                arr = np.load(f)
+                if (list(arr.shape) != list(meta["shape"])
+                        or str(arr.dtype) != meta["dtype"]
+                        or zlib.crc32(arr.tobytes()) != meta["crc32"]):
+                    return False
+        return True
+    except Exception:  # noqa: BLE001 — any parse/IO failure = not valid
+        return False
+
+
+def valid_steps(ckpt_dir, *, deep: bool = True) -> list[int]:
+    """The steps whose checkpoints verify end to end, ascending.  This is
+    the scan ``restore_latest`` walk-back is built on: a torn write (partial
+    leaf set), flipped bytes, or a mangled manifest all disqualify a step
+    without raising."""
+    return [s for s in all_steps(ckpt_dir)
+            if verify_checkpoint(ckpt_dir, s, deep=deep)]
 
 
 def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
-            verify: bool = True):
+            verify: bool = True, match_shapes: bool = False):
     """Restore into the structure of ``target_tree`` (shapes/dtypes may be
     eval_shape'd).  ``shardings``: optional matching tree of NamedShardings —
-    this is what makes restore mesh-elastic."""
+    this is what makes restore mesh-elastic.  ``match_shapes``: reject a
+    checkpoint whose stored leaf shapes disagree with the template's (the
+    walk-back path uses this to skip pre-elastic-re-scale checkpoints whose
+    residual still carries the old mesh width)."""
     path = pathlib.Path(ckpt_dir) / f"step_{step}"
     manifest = json.loads((path / "manifest.json").read_text())
     flat_t, treedef = _flatten(target_tree)
@@ -116,6 +167,12 @@ def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
     out = {}
     for key in flat_t:
         meta = manifest["leaves"][key]
+        if match_shapes and hasattr(flat_t[key], "shape") \
+                and list(meta["shape"]) != list(flat_t[key].shape):
+            raise ValueError(
+                f"checkpoint leaf {key} has shape {meta['shape']} but the "
+                f"template expects {list(flat_t[key].shape)} (stale "
+                f"pre-re-scale checkpoint?)")
         arr = np.load(path / meta["file"])
         if verify and zlib.crc32(arr.tobytes()) != meta["crc32"]:
             raise IOError(f"checkpoint corruption in leaf {key}")
@@ -124,6 +181,26 @@ def restore(ckpt_dir, step: int, target_tree, *, shardings=None,
         out[key] = arr
     return jax.tree_util.tree_unflatten(treedef,
                                         [out[k] for k in flat_t])
+
+
+def restore_latest(ckpt_dir, target_tree, *, shardings=None,
+                   verify: bool = True, match_shapes: bool = True,
+                   on_skip=None):
+    """Walk-back restore: try the newest checkpoint first and degrade to the
+    newest one that restores cleanly (CRC verified, every leaf present,
+    shapes agreeing with the template).  Returns ``(tree, step)``;
+    ``(target_tree, 0)`` when nothing under ``ckpt_dir`` is restorable.
+    ``on_skip(step, exc)`` observes each rejected checkpoint — the resilient
+    loop logs these as resilience events."""
+    for step in reversed(all_steps(ckpt_dir)):
+        try:
+            tree = restore(ckpt_dir, step, target_tree, shardings=shardings,
+                           verify=verify, match_shapes=match_shapes)
+            return tree, step
+        except Exception as e:  # noqa: BLE001 — walk back past any bad step
+            if on_skip is not None:
+                on_skip(step, e)
+    return target_tree, 0
 
 
 def _gc(ckpt_dir, keep: int):

@@ -1,5 +1,7 @@
 """Checkpointing + fault tolerance: round-trip, corruption detection,
-async, GC, resilient loop with injected failures, data-pipeline cursor."""
+async, GC, durable walk-back restore, resilient-loop recovery edge cases
+(in-flight async-save failure, retry exhaustion, no-checkpoint restart,
+data-cursor agreement), heartbeat/clock semantics, data-pipeline cursor."""
 import json
 import pathlib
 
@@ -92,6 +94,178 @@ def test_resilient_loop_recovers(tmp_path):
                                   np.asarray(final2["x"]))
 
 
+def test_all_steps_ignores_tmp_and_valid_steps_ignores_corrupt(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3):
+        C.save(tmp_path, s, tree)
+    # a crash mid-save leaves a .tmp- dir: invisible to every reader
+    (pathlib.Path(tmp_path) / ".tmp-step_4").mkdir()
+    assert C.all_steps(tmp_path) == [1, 2, 3]
+    assert C.latest_step(tmp_path) == 3
+    # corrupt the newest: all_steps still lists it, valid_steps drops it
+    from repro.train.chaos import corrupt_latest
+    assert corrupt_latest(tmp_path) == 3
+    assert C.all_steps(tmp_path) == [1, 2, 3]
+    assert C.valid_steps(tmp_path) == [1, 2]
+    assert C.verify_checkpoint(tmp_path, 2)
+    assert not C.verify_checkpoint(tmp_path, 3)
+    assert not C.verify_checkpoint(tmp_path, 99)      # absent: False, no raise
+
+
+def test_restore_latest_walks_back_past_corrupt_and_torn(tmp_path):
+    from repro.train.chaos import corrupt_latest, torn_checkpoint
+    t1, t2 = _tree(1), _tree(2)
+    C.save(tmp_path, 1, t1)
+    C.save(tmp_path, 2, t2)
+    torn = torn_checkpoint(tmp_path)       # fake newest step 3, half-written
+    assert torn == 3
+    corrupt_latest(tmp_path)               # and flip bytes in it for spite
+    skipped = []
+    out, step = C.restore_latest(tmp_path, t1,
+                                 on_skip=lambda s, e: skipped.append(s))
+    assert step == 2 and skipped == [3]
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_empty_dir_resumes_step0(tmp_path):
+    template = _tree()
+    out, step = C.restore_latest(tmp_path / "never_written", template)
+    assert step == 0 and out is template
+
+
+def test_restore_match_shapes_skips_pre_rescale_checkpoints(tmp_path):
+    """A checkpoint saved before an elastic fold carries the old residual
+    width; the walk-back must skip it rather than restore a wrong-shaped
+    tree (and the shape error must name the leaf)."""
+    wide = {"residual": jnp.ones((4, 3)), "step": jnp.int32(1)}
+    narrow = {"residual": jnp.full((2, 3), 2.0), "step": jnp.int32(2)}
+    C.save(tmp_path, 1, wide)
+    C.save(tmp_path, 2, narrow)
+    with pytest.raises(ValueError, match="residual"):
+        C.restore(tmp_path, 1, narrow, match_shapes=True)
+    out, step = C.restore_latest(tmp_path, narrow)
+    assert step == 2
+    # corrupt the post-fold checkpoint: the only remaining one mismatches
+    # the template, so walk-back degrades all the way to (template, 0)
+    from repro.train.chaos import corrupt_latest
+    corrupt_latest(tmp_path)
+    out, step = C.restore_latest(tmp_path, narrow)
+    assert step == 0 and out is narrow
+
+
+def test_async_checkpointer_stale_error_cleared(tmp_path):
+    """Regression: a failed background save must raise from wait() exactly
+    once — not poison every later save/wait with the same stale exception."""
+    target = tmp_path / "ckpt"
+    target.write_text("a file where the checkpoint dir should be")
+    ac = C.AsyncCheckpointer(target)
+    ac.save(1, _tree())
+    with pytest.raises(Exception):
+        ac.wait()
+    ac.wait()                              # error handed over already: clean
+    target.unlink()                        # storage repaired
+    ac.save(2, _tree())
+    ac.wait()
+    assert C.latest_step(target) == 2
+
+
+def test_loop_survives_failure_during_inflight_async_save(tmp_path,
+                                                          monkeypatch):
+    """A step failure while the background save is (and stays) broken: the
+    drain logs the async error, restore falls back to step 0, and the loop
+    still completes — storage loss degrades, never deadlocks."""
+    real_save = C.save
+    broken = {"on": True}
+
+    def flaky_save(*a, **k):
+        if broken["on"]:
+            raise IOError("storage outage")
+        return real_save(*a, **k)
+    monkeypatch.setattr(C, "save", flaky_save)
+    data = SyntheticLMData(vocab=16, seq_len=4, global_batch=2)
+    fail_at = {7}
+
+    def hook(step):
+        if step in fail_at:
+            fail_at.clear()
+            raise RuntimeError("node failure mid-outage")
+
+    loop = ResilientLoop(step_fn=lambda s, b: (s, {"loss": 0.0}), state={},
+                         data=data, ckpt_dir=tmp_path, ckpt_every=5,
+                         failure_hook=hook, io_backoff_s=0.0)
+    loop.run(10)
+    kinds = [e["kind"] for e in loop.events]
+    assert "async_save_error" in kinds or "io_retry" in kinds
+    restart = next(e for e in loop.events if e["kind"] == "restart")
+    assert restart["restored_step"] == 0    # nothing durable to walk back to
+    assert loop.io_retries_used > 0
+
+
+def test_loop_max_retries_exhaustion_reraises(tmp_path):
+    def hook(step):
+        raise RuntimeError("persistent failure")
+
+    loop = ResilientLoop(step_fn=lambda s, b: (s, {"loss": 0.0}), state={},
+                         data=SyntheticLMData(vocab=16, seq_len=4,
+                                              global_batch=2),
+                         ckpt_dir=tmp_path, ckpt_every=5, max_retries=2,
+                         failure_hook=hook)
+    with pytest.raises(RuntimeError, match="persistent"):
+        loop.run(10)
+    assert loop.restarts == 3               # initial try + 2 retries
+
+
+def test_loop_restart_without_checkpoint_resumes_step0(tmp_path):
+    seen = []
+    fail_at = {3}
+
+    def hook(step):
+        if step in fail_at:
+            fail_at.clear()
+            raise RuntimeError("early failure, nothing saved yet")
+
+    def step_fn(state, batch):
+        seen.append(int(batch["tokens"][0, 0]))
+        return state, {"loss": 0.0}
+
+    data = SyntheticLMData(vocab=64, seq_len=4, global_batch=2)
+    loop = ResilientLoop(step_fn=step_fn, state={}, data=data,
+                         ckpt_dir=tmp_path, ckpt_every=100, failure_hook=hook)
+    loop.run(5)
+    assert loop.lost_steps == 3
+    want = [int(data.batch_at(s)["tokens"][0, 0]) for s in
+            [0, 1, 2] + [0, 1, 2, 3, 4]]
+    assert seen == want                     # full replay from step 0
+
+
+def test_loop_restore_step_and_data_cursor_agree(tmp_path):
+    """After a restore to checkpoint step S the very next batch consumed is
+    ``data.batch_at(S)`` — the failed segment replays exactly."""
+    steps_seen = []
+    fail_at = {7}
+
+    def hook(step):
+        if step in fail_at:
+            fail_at.clear()
+            raise RuntimeError("fail between checkpoints")
+
+    class CursorData:
+        def batch_at(self, step):
+            return {"step": step}
+
+    def step_fn(state, batch):
+        steps_seen.append(batch["step"])
+        return {"x": jnp.float32(batch["step"])}, {"loss": 0.0}
+
+    loop = ResilientLoop(step_fn=step_fn, state={"x": jnp.float32(0)},
+                         data=CursorData(), ckpt_dir=tmp_path, ckpt_every=5,
+                         failure_hook=hook)
+    loop.run(10)
+    assert steps_seen == [0, 1, 2, 3, 4, 5, 6, 5, 6, 7, 8, 9]
+    assert loop.lost_steps == 2
+
+
 def test_heartbeat_straggler_detection():
     hb = Heartbeat(window=10, threshold=1.5)
     for _ in range(10):
@@ -100,6 +274,28 @@ def test_heartbeat_straggler_detection():
     assert hb.stragglers() == ["h2"]
     plan = RebalancePlan.from_heartbeat(hb, ["h0", "h1", "h2", "h3"])
     assert plan.shares["h2"] < plan.shares["h0"]
+    assert abs(sum(plan.shares.values()) - 1.0) < 1e-9
+
+
+def test_heartbeat_medians_clock_and_ping():
+    """The public medians() API (RebalancePlan no longer reaches into
+    _durations), clock-consistent last-seen stamps, liveness pings, and
+    forget() after eviction."""
+    t = {"now": 100.0}
+    hb = Heartbeat(window=4, timeout_s=10.0, clock=lambda: t["now"])
+    hb.record("h0", 1.0)                    # stamped from the injected clock
+    hb.record("h1", 2.0, now=100.0)         # explicit now: same meaning
+    assert hb.medians() == {"h0": 1.0, "h1": 2.0}
+    t["now"] = 109.0
+    assert hb.dead() == []
+    t["now"] = 111.0
+    assert sorted(hb.dead()) == ["h0", "h1"]
+    hb.ping("h0")                           # liveness only: no new duration
+    assert hb.dead() == ["h1"] and hb.medians()["h0"] == 1.0
+    hb.forget("h1")
+    assert hb.dead() == [] and "h1" not in hb.medians()
+    plan = RebalancePlan.from_heartbeat(hb, ["h0", "h9"])
+    assert plan.shares["h9"] > 0            # unseen host: 1.0 fallback median
     assert abs(sum(plan.shares.values()) - 1.0) < 1e-9
 
 

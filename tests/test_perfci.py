@@ -26,13 +26,14 @@ def committed_baselines():
 
 # -- extractors ---------------------------------------------------------------
 
-def test_extractors_cover_all_four_benches(fresh):
+def test_extractors_cover_all_benches(fresh):
     context, metrics = fresh
     # committed artifacts are generated under the default budget; the
     # context comes from the files, not the environment
     assert context == perfci.DEFAULT_CONTEXT
     prefixes = {m.split("/")[0] for m in metrics}
-    assert prefixes == {"conv_fwd", "bwd_wu", "train_scaling", "q8_infer"}
+    assert prefixes == {"conv_fwd", "bwd_wu", "train_scaling", "q8_infer",
+                        "resilience"}
     assert len(metrics) > 300        # per-layer series, not a summary
 
 

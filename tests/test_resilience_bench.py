@@ -1,0 +1,86 @@
+"""The resilience bench (benchmarks/resilience_bench.py): determinism of
+the simulated-time replay, the perf-gate floors on the fresh report, the
+extractor's metric surface, and the committed artifact staying in sync."""
+import json
+import pathlib
+
+import pytest
+
+from benchmarks import resilience_bench as rb
+from repro import perfci
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def report():
+    return rb.build_report()
+
+
+def test_report_is_bit_deterministic(report):
+    again = rb.build_report()
+    assert json.dumps(report, sort_keys=True) == \
+        json.dumps(again, sort_keys=True)
+
+
+def test_fault_free_anchor_and_reference_floor(report):
+    rows = {r["name"]: r for r in report["schedules"]}
+    assert set(rows) == {"fault_free", "reference", "restart_heavy"}
+    ff = rows["fault_free"]
+    assert ff["goodput_ratio"] == 1.0
+    assert ff["restarts"] == ff["lost_steps"] == ff["evictions"] == 0
+    assert ff["events"] == []
+    ref = rows["reference"]
+    # the ISSUE floor: >= 0.9 goodput under the reference schedule
+    assert ref["goodput_ratio"] >= 0.9
+    assert ref["evictions"] == 2 and ref["n_hosts_final"] == 2
+    assert ref["io_retries"] == 2            # the FlakySaves outage, retried
+    heavy = rows["restart_heavy"]
+    assert heavy["restarts"] >= 3 and heavy["goodput_ratio"] >= 0.9
+
+
+def test_every_fold_conserves_mass(report):
+    folds = [f for r in report["schedules"] for f in r["folds"]]
+    folds += report["fold"]
+    assert folds, "no elastic folds exercised"
+    assert all(f["mass_conserved"] == 1.0 for f in folds)
+    # zero lost gradient mass is also a per-schedule scalar the gate floors
+    assert all(r["fold_mass_conserved"] == 1.0 for r in report["schedules"])
+
+
+def test_events_are_sanitized(report):
+    for row in report["schedules"]:
+        for ev in row["events"]:
+            assert set(ev) == {"kind", "step", "t"}, ev
+
+
+def test_walkback_visible_in_reference_schedule(report):
+    ref = next(r for r in report["schedules"] if r["name"] == "reference")
+    kinds = [e["kind"] for e in ref["events"]]
+    assert "ckpt_skipped" in kinds, \
+        "the corrupted checkpoint never forced a walk-back"
+    assert "eviction" in kinds and "restart" in kinds
+
+
+def test_extractor_metric_surface(report):
+    metrics = dict(perfci.extract_resilience(report))
+    for name in ("fault_free", "reference", "restart_heavy"):
+        for leaf in ("goodput_ratio", "recovery_overhead_steps",
+                     "lost_steps", "restarts", "evictions",
+                     "fold_mass_conserved"):
+            assert f"resilience/{name}/{leaf}" in metrics
+    assert metrics["resilience/fold/4to2/mass_conserved"] == 1.0
+    # every resilience metric matches a resilience-specific policy, never
+    # falling through to the generic catch-all drift guard
+    for mid in metrics:
+        pol = perfci.policy_for(mid)
+        assert pol.pattern.startswith("resilience/"), (mid, pol.pattern)
+
+
+def test_committed_artifact_matches_fresh_build(report):
+    committed = json.loads((REPO / "BENCH_resilience.json").read_text())
+    committed.pop("provenance", None)
+    fresh = json.loads(json.dumps(report))
+    fresh.pop("provenance", None)
+    assert committed == fresh, \
+        "BENCH_resilience.json is stale — rerun benchmarks/resilience_bench"
