@@ -19,13 +19,15 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   DESIGN.md §14    -> resilience_bench      (goodput under canned fault
                                              schedules ->
                                              BENCH_resilience.json)
+  DESIGN.md §15    -> serve_fleet_bench     (serving SLOs under replica
+                                             chaos -> BENCH_serve_fleet.json)
   DESIGN.md §7     -> moe_streams_bench     (streams GMM vs dense loop)
   beyond-paper     -> lm_roofline_table     (40-cell arch × shape roofline)
 
 ``--dry`` is the CI smoke mode: it imports every module (catching bit-rot in
 the benchmark code itself) and runs only the cheap fast-path tables — the
 model-based autotune table on a few layers, the tiny-topology serving
-throughput table, and the three JSON-emitting model benches — instead of the
+throughput table, and every JSON-emitting model bench — instead of the
 full timed sweep.
 
 Perf-gate flags (DESIGN.md §12, ``repro.perfci``):
@@ -56,7 +58,8 @@ from benchmarks import (autotune_bench, bwd_wu_layers, conv_fwd_bench,
                         fusion_bench, inception_bench, lm_roofline_table,
                         moe_streams_bench, reduced_precision_bench,
                         resilience_bench, resnet50_layers, scaling_bench,
-                        serve_cnn_bench, streams_bench, train_scaling_bench)
+                        serve_cnn_bench, serve_fleet_bench, streams_bench,
+                        train_scaling_bench)
 
 MODULES = [
     ("conv_fwd_bench", conv_fwd_bench),
@@ -73,10 +76,11 @@ MODULES = [
     ("serve_cnn_bench", serve_cnn_bench),
     ("train_scaling_bench", train_scaling_bench),
     ("resilience_bench", resilience_bench),
+    ("serve_fleet_bench", serve_fleet_bench),
 ]
 
-# the fast-path tables that still *run* in --dry smoke mode (the three
-# model-based JSON emitters are all here: a dry run regenerates every
+# the fast-path tables that still *run* in --dry smoke mode (every
+# model-based JSON emitter is here: a dry run regenerates every
 # perf-gate artifact).  Data, not code, so failure-path tests and the
 # perf-gate can substitute their own lists.
 DRY_CALLS = [
@@ -87,6 +91,7 @@ DRY_CALLS = [
     ("train_scaling_bench", lambda: train_scaling_bench.main([])),
     ("reduced_precision_q8", lambda: reduced_precision_bench.main_q8()),
     ("resilience_bench", lambda: resilience_bench.main([])),
+    ("serve_fleet_bench", lambda: serve_fleet_bench.main([])),
 ]
 
 

@@ -1,0 +1,150 @@
+"""Serving-fleet bench — SLO metrics under canned fault schedules
+(DESIGN.md §15).
+
+Replays three fixed schedules through the real ``FleetRouter`` + real
+``TuneCache`` warm-reseed plumbing (temp dir), with a service-time model
+standing in for the CNN engine pair and ``core.simtime.SimClock``
+supplying time — so every number in ``BENCH_serve_fleet.json`` is a pure
+function of the seeded arrival + fault schedule:
+
+  fault_free      Poisson arrivals, no faults — the goodput identity
+                  anchor (exactly 1.0) and the p50/p99 reference tail
+  reference       the ISSUE acceptance schedule: a straggler replica
+                  (hedging), a mid-run replica death (health eviction +
+                  warm-cache respawn), a flaky accelerator (bounded-backoff
+                  retry), and a request burst — the perf-gate floors
+                  goodput here at 0.9 and slo_handled_rate at 1.0
+  burst_overload  a burst far beyond the SLO-feasible queue depth against
+                  a tight queue bound — the load-shed + degrade-to-int8
+                  profile (every admitted request still completes within
+                  deadline or on the int8 twin)
+
+Goodput is ``in_deadline / offered``; ``slo_handled_rate`` is the §15
+invariant over *admitted* requests (done within deadline, or handed to the
+int8 degrade path).  The real-engine counterpart — a fleet of
+``CnnInferenceEngine`` pairs on fake devices — runs in
+``tests/test_serve_fleet.py``; this bench is the committed, deterministic
+artifact the perf-gate reads.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_serve_fleet.json"
+
+N_REPLICAS = 3
+SERVICE_S = 1.0
+Q8_FACTOR = 0.55
+COLD_SERVICE_S = 3.0
+N_REQUESTS = 120
+RATE_PER_S = 1.5
+DEADLINE_S = 6.0
+QUEUE_BOUND = 32
+ARRIVAL_SEED = 0
+WARM_ENTRIES = 6
+
+
+def schedules() -> dict[str, dict]:
+    from repro.serve import chaos as sz
+    return {
+        "fault_free": {"events": ()},
+        "reference": {"events": (
+            sz.SlowReplica(10.0, "r1", factor=3.0, until=30.0),
+            sz.ReplicaDeath(30.0, "r2"),
+            sz.FlakyInfer(45.0, "r0", times=2),
+            sz.RequestBurst(55.0, 12),
+        )},
+        "burst_overload": {"events": (sz.RequestBurst(20.0, 60),),
+                           "queue_bound": 24},
+    }
+
+
+def _warm_payload(replica: str) -> dict:
+    """Synthetic blocking-cache entries standing in for warmup's tune
+    output — identical across replicas (every replica tuned the same
+    signatures), so the respawn reseed is survivor-agnostic."""
+    return {f"conv/sig{i}": {"blocking": {"hb": 4, "wb": 8, "cb": 64},
+                             "source": "bench-warm", "score_us": 10.0 + i,
+                             "replica_agnostic": True}
+            for i in range(WARM_ENTRIES)}
+
+
+def make_fleet(tmpdir: str):
+    """N modeled replicas with real (temp-dir) TuneCaches pre-seeded the
+    way ``CnnInferenceEngine.warmup`` would, plus the respawn factory that
+    spawns a *cold* cache (the reseed path must supply the warmth)."""
+    from repro.serve import Replica
+    from repro.tune.cache import TuneCache
+
+    def make_replica(name: str, *, warm: bool) -> Replica:
+        cache = TuneCache(str(pathlib.Path(tmpdir) / f"{name}.json"))
+        if warm:
+            cache.merge_entries(_warm_payload(name), persist=False)
+        return Replica(name, cache=cache, service_s=SERVICE_S,
+                       q8_service_factor=Q8_FACTOR,
+                       cold_service_s=COLD_SERVICE_S)
+
+    replicas = [make_replica(f"r{i}", warm=True) for i in range(N_REPLICAS)]
+    return replicas, lambda name: make_replica(name, warm=False)
+
+
+def replay(name: str, spec: dict) -> dict:
+    from repro.serve import (FleetRouter, ServeChaosEngine,
+                             ServeChaosSchedule, poisson_arrivals)
+    arrivals = poisson_arrivals(ARRIVAL_SEED, n=N_REQUESTS,
+                                rate_per_s=RATE_PER_S)
+    with tempfile.TemporaryDirectory(prefix="repro-fleet-") as d:
+        replicas, factory = make_fleet(d)
+        router = FleetRouter(
+            replicas,
+            chaos=ServeChaosEngine(ServeChaosSchedule(spec["events"])),
+            deadline_s=DEADLINE_S,
+            queue_bound=spec.get("queue_bound", QUEUE_BOUND),
+            replica_factory=factory)
+        report = router.run(arrivals)
+    # sanitized event log (kinds + fields only, no object reprs)
+    events = report.pop("events")
+    report["events"] = [e for e in events
+                        if e["kind"] in ("shed", "degrade_admission",
+                                         "degrade_deadline", "hedge",
+                                         "retry_backoff", "eviction",
+                                         "reassign", "respawn")]
+    return {"name": name, **report}
+
+
+def build_report() -> dict:
+    return {
+        "bench": "serve_fleet",
+        "model": {"n_replicas": N_REPLICAS, "service_s": SERVICE_S,
+                  "q8_service_factor": Q8_FACTOR,
+                  "cold_service_s": COLD_SERVICE_S,
+                  "n_requests": N_REQUESTS, "rate_per_s": RATE_PER_S,
+                  "deadline_s": DEADLINE_S, "queue_bound": QUEUE_BOUND,
+                  "arrival_seed": ARRIVAL_SEED,
+                  "warm_entries": WARM_ENTRIES},
+        "schedules": [replay(name, spec)
+                      for name, spec in schedules().items()],
+    }
+
+
+def main(argv=None) -> dict:
+    from benchmarks.common import bench_out_path, emit
+    report = build_report()
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1) + "\n")
+    for r in report["schedules"]:
+        emit(f"serve_fleet_{r['name']}", 0.0,
+             f"goodput={r['goodput']:.4f} p99_ms={r['p99_ms']:.1f} "
+             f"shed_rate={r['shed_rate']:.4f} "
+             f"degrade_rate={r['degrade_rate']:.4f} "
+             f"slo_handled={r['slo_handled_rate']:.4f} "
+             f"evictions={r['evictions']} respawns={r['respawns']}")
+    print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -106,6 +106,17 @@ def cnn_model_flops(etg, image_hw, batch: int) -> float:
 
 # -- bucketing ---------------------------------------------------------------
 
+def round_buckets(buckets, num_shards: int) -> tuple[int, ...]:
+    """Round every rung up to the next multiple of ``num_shards`` (dedup'd,
+    sorted) so a padded batch always splits evenly across the data-parallel
+    mesh — a caller-supplied ladder like (2, 6) on 4 shards becomes (4, 8)
+    instead of tripping a shard-split assert deep in shard_map."""
+    assert num_shards >= 1
+    rounded = {-(-int(b) // num_shards) * num_shards for b in buckets}
+    assert all(b >= 1 for b in rounded), buckets
+    return tuple(sorted(rounded))
+
+
 def make_buckets(max_batch: int, *, num_shards: int = 1) -> tuple[int, ...]:
     """Geometric bucket ladder; every bucket is a multiple of ``num_shards``
     so a padded batch always splits evenly across the data-parallel mesh."""
@@ -115,16 +126,19 @@ def make_buckets(max_batch: int, *, num_shards: int = 1) -> tuple[int, ...]:
         out.append(b)
         b *= 2
     out.append(b)
-    return tuple(out)
+    return round_buckets(out, num_shards)
 
 
 def pick_bucket(n: int, buckets) -> int:
-    """Smallest bucket that fits ``n`` requests (minimal padding); callers
-    with ``n`` beyond the largest bucket chunk the batch first."""
+    """Smallest bucket that fits ``n`` requests (minimal padding).  A batch
+    beyond the largest bucket has no executor to run on — silently serving
+    it at ``max(buckets)`` would truncate lanes, so it raises; callers
+    chunk first (``ImageServer.step`` takes at most ``max(buckets)``)."""
     for b in sorted(buckets):
         if b >= n:
             return b
-    return max(buckets)
+    raise ValueError(f"batch {n} exceeds largest bucket {max(buckets)}; "
+                     f"chunk it first")
 
 
 class CnnInferenceEngine:
@@ -169,10 +183,8 @@ class CnnInferenceEngine:
         self.autotune = autotune
         from repro.launch.mesh import data_axis_size
         self.num_shards = data_axis_size(mesh) if mesh is not None else 1
-        self.buckets = tuple(sorted(buckets)) if buckets else \
-            make_buckets(max_batch, num_shards=self.num_shards)
-        assert all(b % self.num_shards == 0 for b in self.buckets), \
-            (self.buckets, self.num_shards)
+        self.buckets = round_buckets(buckets, self.num_shards) if buckets \
+            else make_buckets(max_batch, num_shards=self.num_shards)
         if donate_input is None:
             # donation is a no-op (plus a warning) on CPU backends
             donate_input = jax.default_backend() not in ("cpu",)

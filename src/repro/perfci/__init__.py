@@ -1,8 +1,9 @@
 """Roofline-gated perf regression CI (DESIGN.md §12).
 
 The committed bench artifacts (BENCH_conv_fwd.json, BENCH_bwd_wu.json,
-BENCH_train_scaling.json, BENCH_q8_infer.json, BENCH_resilience.json) are
-point-in-time snapshots of the roofline / goodput models;
+BENCH_train_scaling.json, BENCH_q8_infer.json, BENCH_resilience.json,
+BENCH_serve_fleet.json) are point-in-time snapshots of the roofline /
+goodput / serving-SLO models;
 this package turns them into a *gate* in the ReFrame mold — perf numbers
 expressed as pass/fail sanity checks against committed references:
 
@@ -25,7 +26,8 @@ from repro.perfci.check import MissingBaseline, run_check, run_update
 from repro.perfci.compare import MetricResult, Verdict, compare
 from repro.perfci.extract import (SCHEMA_VERSION, context_key, extract_all,
                                   extract_bwd_wu, extract_conv_fwd,
-                                  extract_resilience, extract_train_scaling)
+                                  extract_resilience, extract_serve_fleet,
+                                  extract_train_scaling)
 from repro.perfci.policy import (DEFAULT_CONTEXT, DEFAULT_POLICIES,
                                  Tolerance, policies_for_context, policy_for)
 from repro.perfci.store import (BASELINE_PATH, TRAJECTORY_PATH,
@@ -36,6 +38,7 @@ from repro.perfci.store import (BASELINE_PATH, TRAJECTORY_PATH,
 __all__ = [
     "SCHEMA_VERSION", "context_key", "extract_all", "extract_conv_fwd",
     "extract_bwd_wu", "extract_train_scaling", "extract_resilience",
+    "extract_serve_fleet",
     "Tolerance", "DEFAULT_POLICIES", "DEFAULT_CONTEXT", "policy_for",
     "policies_for_context",
     "MetricResult", "Verdict", "compare",

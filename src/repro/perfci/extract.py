@@ -26,6 +26,9 @@ bump ``SCHEMA_VERSION``.
                          restarts|evictions|fold_mass_conserved}
   resilience/fold/{old}to{new}/mass_conserved         (elastic residual
                                                        fold, exact)
+  serve_fleet/{schedule}/{goodput|slo_handled_rate|shed_rate|degrade_rate|
+                          p50_ms|p99_ms|failed|evictions|respawns|
+                          reseeded_entries|hedges|retries}
 
 Margins are ratios >= 1.0 by construction of the paper's claims ("tiled
 never slower than whole-plane", "zero-free duality never moves more
@@ -43,7 +46,9 @@ import pathlib
 
 # v2: + the q8_infer bench (BENCH_q8_infer.json, int8 serving speedups)
 # v3: + the resilience bench (BENCH_resilience.json, goodput under faults)
-SCHEMA_VERSION = 3
+# v4: + the serve_fleet bench (BENCH_serve_fleet.json, serving SLO metrics
+#     under replica chaos)
+SCHEMA_VERSION = 4
 
 # bench-name -> committed artifact filename (repo root)
 BENCH_FILES = {
@@ -52,6 +57,7 @@ BENCH_FILES = {
     "train_scaling": "BENCH_train_scaling.json",
     "q8_infer": "BENCH_q8_infer.json",
     "resilience": "BENCH_resilience.json",
+    "serve_fleet": "BENCH_serve_fleet.json",
 }
 
 _EPS = 1e-12
@@ -147,12 +153,29 @@ def extract_resilience(report: dict) -> dict[str, float]:
     return out
 
 
+def extract_serve_fleet(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for r in report["schedules"]:
+        base = f"serve_fleet/{r['name']}"
+        out[f"{base}/goodput"] = r["goodput"]
+        out[f"{base}/slo_handled_rate"] = r["slo_handled_rate"]
+        out[f"{base}/shed_rate"] = r["shed_rate"]
+        out[f"{base}/degrade_rate"] = r["degrade_rate"]
+        out[f"{base}/p50_ms"] = r["p50_ms"]
+        out[f"{base}/p99_ms"] = r["p99_ms"]
+        for k in ("failed", "evictions", "respawns", "reseeded_entries",
+                  "hedges", "retries"):
+            out[f"{base}/{k}"] = float(r[k])
+    return out
+
+
 _EXTRACTORS = {
     "conv_fwd": extract_conv_fwd,
     "bwd_wu": extract_bwd_wu,
     "train_scaling": extract_train_scaling,
     "q8_infer": extract_q8_infer,
     "resilience": extract_resilience,
+    "serve_fleet": extract_serve_fleet,
 }
 
 
@@ -180,8 +203,9 @@ def context_key(reports: dict[str, dict]) -> str:
     a 16 MiB baseline against a 1 MiB fresh run would gate noise, not
     regressions (the ReFrame analog: references are keyed by system).
     """
-    # (train_scaling and resilience carry no vmem stamp: the scaling model
-    # and the fault-schedule replay are budget-independent by construction)
+    # (train_scaling, resilience, and serve_fleet carry no vmem stamp: the
+    # scaling model and the fault-schedule replays are budget-independent
+    # by construction)
     budgets = {reports[b]["vmem_budget"]
                for b in ("conv_fwd", "bwd_wu", "q8_infer") if b in reports}
     if len(budgets) > 1:

@@ -82,6 +82,31 @@ DEFAULT_POLICIES: tuple[Tolerance, ...] = (
     # change in the recovery policy, not noise
     Tolerance("resilience/*", "both", 0.0, note="deterministic replay: "
                                                 "exact match"),
+    # the PR-9 serving-fleet bars: fault-free goodput is the identity
+    # anchor; the reference chaos schedule (straggler + replica death +
+    # flaky accelerator + burst) must keep >= 90% of requests in deadline
+    # with zero operator intervention; and *every* admitted request must
+    # either finish in deadline or ride the int8 degrade path
+    Tolerance("serve_fleet/fault_free/goodput", "higher", 0.0,
+              floor=1.0, ceiling=1.0, note="identity anchor"),
+    Tolerance("serve_fleet/reference/goodput", "higher", 0.02,
+              floor=0.9, note="ISSUE hard floor: goodput >= 0.9 under the "
+                              "reference chaos schedule"),
+    Tolerance("serve_fleet/*/goodput", "higher", 0.02),
+    Tolerance("serve_fleet/*/slo_handled_rate", "higher", 0.0, floor=1.0,
+              ceiling=1.0, note="ISSUE hard floor: every admitted request "
+                                "in deadline or degraded to int8"),
+    Tolerance("serve_fleet/*/failed", "lower", 0.0, ceiling=0.0,
+              note="retries must never exhaust under the canned schedules"),
+    Tolerance("serve_fleet/reference/p99_ms", "lower", 0.02, ceiling=5000.0,
+              note="tail bar: recovery keeps p99 under the 5s line"),
+    Tolerance("serve_fleet/*/p50_ms", "lower", 0.02),
+    Tolerance("serve_fleet/*/p99_ms", "lower", 0.02),
+    Tolerance("serve_fleet/*/shed_rate", "lower", 0.0),
+    # eviction/respawn/hedge/retry counts are schedule facts: any change is
+    # a behavior change in the fleet policy, not noise
+    Tolerance("serve_fleet/*", "both", 0.0, note="deterministic replay: "
+                                                 "exact match"),
     # the PR-7 acceptance bar: int8 serving >= 1.6x on every
     # bandwidth-bound ResNet-50 layer (BENCH_q8_infer.json summary)
     Tolerance("q8_infer/resnet50/min_bw_speedup", "higher", 0.02, floor=1.6,

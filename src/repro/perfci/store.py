@@ -126,6 +126,10 @@ def trajectory_record(context: str, metrics: dict[str, float], *,
                 "q8_infer/resnet50/min_bw_speedup"),
             "resilience_goodput": metrics.get(
                 "resilience/reference/goodput_ratio"),
+            "serve_fleet_goodput": metrics.get(
+                "serve_fleet/reference/goodput"),
+            "serve_fleet_p99_ms": metrics.get(
+                "serve_fleet/reference/p99_ms"),
         },
     }
     if verdict_json is not None:

@@ -1,0 +1,15 @@
+"""Resilient serving fleet over the GxM inference engine (DESIGN.md §15):
+``FleetRouter`` + ``Replica`` (deadlines, retries, hedging, eviction +
+warm-cache respawn, load shed, degrade-to-int8) and the seeded
+``ServeChaosEngine`` fault harness that replays against it."""
+from repro.serve.chaos import (FlakyInfer, ReplicaDeath, RequestBurst,
+                               ServeChaosEngine, ServeChaosSchedule,
+                               SlowReplica)
+from repro.serve.fleet import (FleetRouter, Replica, Request,
+                               poisson_arrivals)
+
+__all__ = [
+    "FlakyInfer", "FleetRouter", "Replica", "ReplicaDeath", "Request",
+    "RequestBurst", "ServeChaosEngine", "ServeChaosSchedule", "SlowReplica",
+    "poisson_arrivals",
+]

@@ -38,28 +38,16 @@ import shutil
 
 import numpy as np
 
+from repro.core.simtime import SimClock, seeded_rng  # noqa: F401 — SimClock
+# is re-exported here for compatibility: it grew up in this module (PR 8)
+# and moved to core/simtime.py when the serving fleet (serve/) needed the
+# same simulated-time substrate (DESIGN.md §15).
 from repro.train import checkpoint as ckpt_lib
 from repro.train.fault_tolerance import Heartbeat
 
 
 class ChaosError(RuntimeError):
     """An injected failure (step fault / collective timeout)."""
-
-
-@dataclasses.dataclass
-class SimClock:
-    """Simulated time: ``sleep`` advances instead of blocking, so backoff
-    and detection timeouts cost *modeled* seconds, deterministically."""
-    t: float = 0.0
-
-    def time(self) -> float:
-        return self.t
-
-    def sleep(self, s: float) -> None:
-        self.t += float(s)
-
-    def advance(self, s: float) -> None:
-        self.t += float(s)
 
 
 # -- fault vocabulary ---------------------------------------------------------
@@ -117,7 +105,7 @@ class ChaosSchedule:
         most ``len(hosts) - 1`` deaths are drawn so the fleet never empties.
         Same seed -> identical schedule, bit for bit."""
         hosts = list(hosts)
-        rng = np.random.default_rng(np.random.SeedSequence([0xC4A05, seed]))
+        rng = seeded_rng(0xC4A05, seed)
         n = max(1, round(n_steps * 0.02 * intensity))
         mortal = hosts[1:]
         events = []

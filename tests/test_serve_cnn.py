@@ -9,7 +9,7 @@ from repro import backend as be
 from repro.graph import GxM, resnet50
 from repro.graph.serving import (CnnInferenceEngine, cnn_model_flops,
                                  conv_shapes, distinct_conv_signatures,
-                                 make_buckets, pick_bucket)
+                                 make_buckets, pick_bucket, round_buckets)
 from repro.launch.mesh import make_host_mesh
 from repro.launch.serve_cnn import ImageServer
 from repro.tune.cache import TuneCache, conv_key
@@ -38,6 +38,26 @@ def test_make_buckets_ladder_and_shard_multiples():
     assert all(b % 4 == 0 for b in make_buckets(32, num_shards=4))
 
 
+def test_round_buckets_rounds_up_to_shard_multiples():
+    # a caller ladder that doesn't divide num_shards rounds UP (never
+    # truncates capacity) and dedups collisions
+    assert round_buckets((2, 6), 4) == (4, 8)
+    assert round_buckets((1, 2, 3, 4), 2) == (2, 4)
+    assert round_buckets((3, 5, 8), 1) == (3, 5, 8)    # no-op on 1 shard
+
+
+def test_engine_rounds_explicit_buckets_up(monkeypatch):
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(3, 6))
+    # the host mesh's shard count varies by CI job (fake-device flags)
+    assert eng.buckets == round_buckets((3, 6), eng.num_shards)
+    # a 4-shard mesh must round the explicit ladder up, not assert
+    import repro.launch.mesh as mesh_mod
+    monkeypatch.setattr(mesh_mod, "data_axis_size", lambda mesh: 4)
+    eng2 = _engine(m, params, buckets=(3, 6))
+    assert eng2.buckets == (4, 8)
+
+
 def test_pick_bucket_is_minimal():
     buckets = (2, 4, 8, 16)
     assert pick_bucket(1, buckets) == 2
@@ -45,7 +65,12 @@ def test_pick_bucket_is_minimal():
     assert pick_bucket(3, buckets) == 4
     assert pick_bucket(5, buckets) == 8
     assert pick_bucket(16, buckets) == 16
-    assert pick_bucket(99, buckets) == 16              # caller chunks
+
+
+def test_pick_bucket_rejects_oversized_batch():
+    # silently serving at max(buckets) would truncate lanes — must raise
+    with pytest.raises(ValueError, match="exceeds largest bucket"):
+        pick_bucket(99, (2, 4, 8, 16))
 
 
 # -- shape inference ---------------------------------------------------------
@@ -129,7 +154,8 @@ def test_compiled_buckets_consult_tuner_cache(monkeypatch):
     m.impl = "interpret"        # xla path never consults conv_blocking
     eng = _engine(m, params, buckets=(2,))
     eng.warmup(autotune="off")  # compile-only; engine scope is "cache"
-    assert looked_up and set(looked_up) == {2}, looked_up
+    # lookups happen at the per-shard batch (bucket / data shards)
+    assert looked_up and set(looked_up) == {eng.local_batch(2)}, looked_up
 
 
 def test_warmup_compiles_every_bucket(rng):
@@ -231,11 +257,35 @@ def test_server_serves_all_requests_and_counts_padding(rng):
     assert set(results) == set(rids)
     # 7 requests -> one bucket-4 batch (4 reqs) + bucket-4 batch (3 reqs,
     # 1 padded lane)
-    assert server.stats["images"] == 7
-    assert server.stats["padded_lanes"] == 1
+    st = server.stats()
+    assert st["images"] == 7
+    assert st["padded_lanes"] == 1
+    # every request's enqueue->complete latency is recorded
+    assert st["latency"]["count"] == 7
+    assert st["latency"]["p99_ms"] >= st["latency"]["p50_ms"] >= 0.0
     # scheduler results match the direct forward
     logits = np.asarray(m.forward(params, jnp.asarray(images), train=False))
     for rid, img_logits in zip(rids, logits):
         top1, val = results[rid]
         assert top1 == int(np.argmax(img_logits))
         assert val == float(img_logits[top1])
+
+
+def test_server_latency_includes_queue_wait(rng):
+    """Latency is enqueue->complete under an injectable clock: a request
+    stuck behind a full bucket waits one extra step, and stats() reports
+    exactly that."""
+    from repro.core.simtime import SimClock
+    m, params = _tiny()
+    eng = _engine(m, params, buckets=(2,))
+    eng.warmup(autotune="off")
+    clk = SimClock()
+    server = ImageServer(eng, clock=lambda: (clk.sleep(1.0), clk.time())[1])
+    for img in rng.standard_normal((3, 32, 32, 3)).astype(np.float32):
+        server.submit(img)                 # enqueued at t=1, 2, 3
+    server.run()
+    st = server.stats()["latency"]
+    assert st["count"] == 3
+    # step 1 serves reqs 0,1 (clock reads at t=4 and t=5); step 2 serves
+    # req 2 (reads at t=6 and t=7) -> latencies 4, 3, 4 seconds
+    assert sorted(server.latencies_s) == [3.0, 4.0, 4.0]

@@ -1,0 +1,300 @@
+"""The resilient serving fleet (repro.serve, DESIGN.md §15): simtime
+substrate, seeded chaos schedules, every FleetRouter policy (deadlines,
+backoff retries, hedging, eviction + warm-cache respawn, load shed,
+degrade-to-int8) on the modeled path, and a real-engine fleet — including
+the mid-burst f32 -> int8 degrade flip keeping top-1 parity and padded-lane
+bit-invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.simtime import SimClock, seeded_rng
+from repro.serve import (FlakyInfer, FleetRouter, Replica, ReplicaDeath,
+                         RequestBurst, ServeChaosEngine, ServeChaosSchedule,
+                         SlowReplica, poisson_arrivals)
+from repro.tune.cache import TuneCache
+
+
+# -- simtime ------------------------------------------------------------------
+
+def test_simclock_advance_to_is_monotone():
+    clk = SimClock()
+    clk.sleep(2.0)
+    clk.advance_to(5.0)
+    assert clk.time() == 5.0
+    clk.advance_to(3.0)                   # never rewinds
+    assert clk.time() == 5.0
+
+
+def test_seeded_rng_deterministic_and_component_sensitive():
+    a = seeded_rng(0xABC, 7).standard_normal(4)
+    b = seeded_rng(0xABC, 7).standard_normal(4)
+    c = seeded_rng(0xABC, 8).standard_normal(4)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_train_chaos_reexports_simclock():
+    # the PR-8 import surface must survive the extraction to core/simtime
+    from repro.train import chaos as cz
+    assert cz.SimClock is SimClock and cz.seeded_rng is seeded_rng
+
+
+# -- chaos schedules ----------------------------------------------------------
+
+def test_generated_schedule_deterministic_and_replica0_immortal():
+    kw = dict(horizon_s=200.0, replicas=["r0", "r1", "r2"])
+    a = ServeChaosSchedule.generate(3, **kw)
+    b = ServeChaosSchedule.generate(3, **kw)
+    assert a == b
+    c = ServeChaosSchedule.generate(4, **kw)
+    assert a != c
+    for seed in range(8):
+        s = ServeChaosSchedule.generate(seed, **kw)
+        deaths = [e for e in s.events if isinstance(e, ReplicaDeath)]
+        assert all(e.replica != "r0" for e in deaths)
+        assert len(deaths) <= 2           # the fleet never empties
+
+
+def test_engine_death_is_per_incarnation():
+    eng = ServeChaosEngine(ServeChaosSchedule((ReplicaDeath(10.0, "r1"),)))
+    assert not eng.is_dead("r1", 9.0)
+    assert eng.is_dead("r1", 10.0) and eng.is_dead("r1", 50.0)
+    # a respawn born after the death event is a fresh, healthy process
+    assert not eng.is_dead("r1", 50.0, born=20.0)
+    assert not eng.is_dead("r0", 50.0)
+
+
+def test_engine_slow_window_and_flaky_tokens():
+    eng = ServeChaosEngine(ServeChaosSchedule((
+        SlowReplica(5.0, "r1", factor=3.0, until=10.0),
+        FlakyInfer(20.0, "r0", times=2),
+    )))
+    assert eng.slow_factor("r1", 4.0) == 1.0
+    assert eng.slow_factor("r1", 7.0) == 3.0
+    assert eng.slow_factor("r1", 10.0) == 1.0   # recovered at `until`
+    assert eng.take_infer_fault("r0", 19.0) is None
+    assert eng.take_infer_fault("r0", 21.0) is not None
+    assert eng.take_infer_fault("r0", 22.0) is not None
+    assert eng.take_infer_fault("r0", 23.0) is None   # tokens exhausted
+
+
+# -- the modeled fleet --------------------------------------------------------
+
+def _fleet(n=3, tmp_path=None, warm=6):
+    def make(name, *, seed_warm=True):
+        cache = None
+        if tmp_path is not None:
+            cache = TuneCache(str(tmp_path / f"{name}.json"))
+            if seed_warm:
+                cache.merge_entries(
+                    {f"sig{i}": {"blocking": {"hb": 4}, "source": "t",
+                                 "score_us": 1.0} for i in range(warm)},
+                    persist=False)
+        # the cold penalty only models something when caches exist (a
+        # cacheless replica would otherwise charge it on every first hit)
+        return Replica(name, cache=cache, service_s=1.0,
+                       cold_service_s=3.0 if cache is not None else 0.0)
+
+    replicas = [make(f"r{i}") for i in range(n)]
+    return replicas, lambda name: make(name, seed_warm=False)
+
+
+def _arrivals(n=30, rate=1.5):
+    return poisson_arrivals(0, n=n, rate_per_s=rate)
+
+
+def test_fault_free_run_meets_every_deadline():
+    replicas, _ = _fleet()
+    router = FleetRouter(replicas, deadline_s=6.0)
+    rep = router.run(_arrivals())
+    assert rep["offered"] == rep["completed"] == rep["in_deadline"] == 30
+    assert rep["goodput"] == 1.0 and rep["shed"] == rep["failed"] == 0
+    assert rep["evictions"] == rep["hedges"] == rep["retries"] == 0
+
+
+def test_run_is_bit_deterministic():
+    import json
+    outs = []
+    for _ in range(2):
+        replicas, _ = _fleet()
+        chaos = ServeChaosEngine(ServeChaosSchedule((
+            SlowReplica(3.0, "r1", factor=4.0, until=12.0),
+            FlakyInfer(6.0, "r2"), RequestBurst(9.0, 8))))
+        router = FleetRouter(replicas, chaos=chaos, deadline_s=6.0)
+        outs.append(json.dumps(router.run(_arrivals()), sort_keys=True))
+    assert outs[0] == outs[1]
+
+
+def test_dead_replica_evicted_and_respawned_with_warm_cache(tmp_path):
+    replicas, factory = _fleet(tmp_path=tmp_path)
+    chaos = ServeChaosEngine(ServeChaosSchedule((ReplicaDeath(5.0, "r1"),)))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=8.0,
+                         replica_factory=factory)
+    rep = router.run(_arrivals(40))
+    assert rep["evictions"] == 1 and rep["respawns"] == 1
+    # the respawn was re-seeded from a survivor, never re-tunes cold
+    assert rep["reseeded_entries"] == 6
+    respawn = next(e for e in rep["events"] if e["kind"] == "respawn")
+    assert respawn["warm"] and respawn["replica"] == "r1"
+    assert router.live["r1"].warm_entries() == 6
+    # the second incarnation serves again (health-armed, born reset)
+    assert router.born["r1"] > 5.0
+    assert rep["failed"] == 0 and rep["slo_handled_rate"] == 1.0
+
+
+def test_cold_respawn_pays_tune_penalty_without_reseed(tmp_path):
+    replicas, factory = _fleet(tmp_path=tmp_path)
+    cold = factory("rX")
+    assert cold.warm_entries() == 0
+    assert cold.service_time() == 1.0 + 3.0       # cold first dispatch
+    warm = replicas[0]
+    assert warm.service_time() == 1.0             # warm never pays
+    cold.seed_warm(warm.export_warm())
+    assert cold.service_time() == 1.0             # reseed removes the penalty
+
+
+def test_straggler_is_hedged_and_first_completion_wins():
+    replicas, _ = _fleet()
+    chaos = ServeChaosEngine(ServeChaosSchedule((
+        SlowReplica(0.0, "r1", factor=10.0),)))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=6.0,
+                         hedge_after_s=1.5)
+    rep = router.run(_arrivals(20))
+    assert rep["hedges"] > 0
+    cancels = [e for e in rep["events"] if e["kind"] == "hedge_cancel"]
+    assert cancels, "the losing twin was never cancelled"
+    hedged = [r for r in router.requests.values() if r.hedged]
+    assert hedged and all(r.status == "done" for r in hedged)
+    assert rep["goodput"] == 1.0
+
+
+def test_flaky_dispatch_retries_with_backoff_on_other_replica():
+    replicas, _ = _fleet()
+    chaos = ServeChaosEngine(ServeChaosSchedule((FlakyInfer(0.0, "r0",
+                                                            times=2),)))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=6.0)
+    rep = router.run(_arrivals(10))
+    assert rep["retries"] == 2 and rep["failed"] == 0
+    backoffs = [e for e in rep["events"] if e["kind"] == "retry_backoff"]
+    assert [b["delay_s"] for b in backoffs] == [0.25, 0.25]
+    retried = [r for r in router.requests.values() if r.retries]
+    # the retry landed on a replica the request hadn't failed on
+    for r in retried:
+        assert r.status == "done"
+        assert r.dispatches[-1][0] not in r.avoid
+
+
+def test_retries_are_bounded():
+    replicas, _ = _fleet(n=2)
+    chaos = ServeChaosEngine(ServeChaosSchedule(
+        tuple(FlakyInfer(0.0, f"r{i}", times=50) for i in range(2))))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=30.0,
+                         max_retries=2, hedge_after_s=None)
+    rep = router.run([(0.0, None)])
+    assert rep["failed"] == 1 and rep["retries"] == 3   # 1 + max_retries
+    assert any(e["kind"] == "retries_exhausted" for e in rep["events"])
+
+
+def test_overload_sheds_beyond_queue_bound_and_degrades_beyond_slo():
+    replicas, _ = _fleet()
+    chaos = ServeChaosEngine(ServeChaosSchedule((RequestBurst(5.0, 60),)))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=6.0,
+                         queue_bound=20)
+    rep = router.run(_arrivals(30))
+    assert rep["shed"] > 0 and rep["degraded_completed"] > 0
+    assert rep["failed"] == 0
+    # the §15 invariant: every admitted request completes in deadline or
+    # rides the int8 degrade path — nothing silently busts its SLO
+    assert rep["slo_handled_rate"] == 1.0
+    kinds = {e["kind"] for e in rep["events"]}
+    assert "shed" in kinds and "degrade_admission" in kinds
+
+
+def test_degrade_disabled_rejects_nothing_but_busts_deadlines():
+    replicas, _ = _fleet()
+    chaos = ServeChaosEngine(ServeChaosSchedule((RequestBurst(5.0, 40),)))
+    kw = dict(chaos=chaos, deadline_s=6.0, queue_bound=100)
+    on = FleetRouter(_fleet()[0], degrade=True, **kw).run(_arrivals(20))
+    off = FleetRouter(replicas, degrade=False, **kw).run(_arrivals(20))
+    assert on["slo_handled_rate"] == 1.0
+    assert off["degraded_completed"] == 0
+    assert off["slo_handled_rate"] < 1.0     # deep arrivals bust deadlines
+    assert on["goodput"] >= off["goodput"]
+
+
+# -- the real-engine fleet ----------------------------------------------------
+
+def _engine_pair(params):
+    """f32 + quantized-twin CnnInferenceEngine pair on tiny topology."""
+    from repro.graph import GxM, resnet50
+    from repro.graph.serving import CnnInferenceEngine
+    from repro.launch.mesh import make_host_mesh
+    nl = resnet50(num_classes=10, stages=(1, 1, 1, 1))
+    mesh = make_host_mesh()
+    f32 = CnnInferenceEngine(GxM(nl, num_classes=10, impl="interpret"),
+                             params, image_hw=(32, 32), mesh=mesh,
+                             buckets=(2,))
+    f32.warmup(autotune="off")
+    q8 = CnnInferenceEngine(
+        GxM(nl, num_classes=10, impl="interpret", quantized=True),
+        params, image_hw=(32, 32), mesh=mesh, buckets=(2,))
+    q8.warmup(autotune="off")
+    return f32, q8
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    from repro.graph import GxM, resnet50
+    nl = resnet50(num_classes=10, stages=(1, 1, 1, 1))
+    params = GxM(nl, num_classes=10).init(jax.random.PRNGKey(0))
+    return params, _engine_pair(params)
+
+
+def test_real_fleet_degrade_flip_keeps_top1_and_lane_invariance(engine_pair,
+                                                                rng):
+    """Satellite 4: a request the router flips to the int8 twin mid-burst
+    must agree with the f32 engine on top-1, and the q8 twin's padded lane
+    must stay bit-invisible under the flip."""
+    params, (f32, q8) = engine_pair
+    replicas = [Replica(f"r{i}", infer_fn=f32.infer, q8_infer_fn=q8.infer,
+                        service_s=1.0) for i in range(2)]
+    images = rng.standard_normal((10, 32, 32, 3)).astype(np.float32)
+    chaos = ServeChaosEngine(ServeChaosSchedule((RequestBurst(0.5, 6),)))
+    router = FleetRouter(replicas, chaos=chaos, deadline_s=3.0,
+                         queue_bound=64, slo_depth=2,
+                         burst_image_fn=lambda i: images[4 + i])
+    rep = router.run([(0.1 * i, images[i]) for i in range(4)])
+    assert rep["completed"] == rep["offered"] == 10
+    assert rep["degraded_completed"] > 0, "the burst never forced a degrade"
+    assert rep["slo_handled_rate"] == 1.0
+
+    ref = np.asarray(f32.gxm.forward(params, jnp.asarray(images),
+                                     train=False))
+    by_image = {4 + i: img for i, img in enumerate(images[4:])}
+    by_image.update({i: images[i] for i in range(4)})
+    for req in router.requests.values():
+        assert req.result is not None
+        # identify which source image this request carried
+        idx = next(i for i, img in by_image.items()
+                   if np.array_equal(img, req.image))
+        assert int(np.argmax(req.result)) == int(np.argmax(ref[idx])), \
+            (idx, req.degraded)
+        if not req.degraded:
+            # the router returned exactly what the f32 engine serves for
+            # this image (same bucket shape: bit-exact by construction)
+            np.testing.assert_array_equal(
+                req.result, np.asarray(f32.infer(req.image[None]))[0])
+
+    # padded-lane bit-invariance on the degrade path: the q8 twin serving
+    # a single flipped request (pad 1 -> bucket 2) must match the same
+    # image in a junk-padded lane bit for bit
+    flipped = next(r for r in router.requests.values() if r.degraded)
+    solo = np.asarray(q8.infer(np.asarray(flipped.image)[None]))[0]
+    np.testing.assert_array_equal(solo, flipped.result)
+    fn = q8.aot_executable(2)
+    junk = 100 * rng.standard_normal((1, 32, 32, 3)).astype(np.float32)
+    padded = fn(q8._run_params,
+                jnp.asarray(np.stack([flipped.image, junk[0]])))
+    np.testing.assert_array_equal(np.asarray(padded)[0], flipped.result)

@@ -1,0 +1,105 @@
+"""The serving-fleet bench (benchmarks/serve_fleet_bench.py): determinism
+of the simulated-time replay, the perf-gate floors on the fresh report, the
+extractor's metric surface, and the committed artifact staying in sync."""
+import json
+import pathlib
+
+import pytest
+
+from benchmarks import serve_fleet_bench as sfb
+from repro import perfci
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def report():
+    return sfb.build_report()
+
+
+def test_report_is_bit_deterministic(report):
+    again = sfb.build_report()
+    assert json.dumps(report, sort_keys=True) == \
+        json.dumps(again, sort_keys=True)
+
+
+def test_fault_free_anchor_and_reference_floors(report):
+    rows = {r["name"]: r for r in report["schedules"]}
+    assert set(rows) == {"fault_free", "reference", "burst_overload"}
+    ff = rows["fault_free"]
+    assert ff["goodput"] == 1.0 and ff["shed"] == ff["failed"] == 0
+    assert ff["evictions"] == ff["hedges"] == ff["retries"] == 0
+    assert ff["events"] == []
+    ref = rows["reference"]
+    # the ISSUE floors: >= 0.9 goodput with zero operator intervention —
+    # the dead replica is evicted and respawned with a warm cache, the
+    # straggler is hedged around, the flaky dispatches retried
+    assert ref["goodput"] >= 0.9
+    assert ref["evictions"] == 1 and ref["respawns"] == 1
+    assert ref["reseeded_entries"] == sfb.WARM_ENTRIES
+    assert ref["hedges"] > 0 and ref["retries"] > 0
+    assert ref["failed"] == 0
+
+
+def test_slo_invariant_holds_on_every_schedule(report):
+    # every admitted request completes within its deadline or was handed
+    # to the int8 degrade path — even under burst overload
+    for r in report["schedules"]:
+        assert r["slo_handled_rate"] == 1.0, r["name"]
+        assert r["failed"] == 0, r["name"]
+
+
+def test_burst_overload_sheds_and_degrades(report):
+    burst = next(r for r in report["schedules"]
+                 if r["name"] == "burst_overload")
+    assert burst["shed_rate"] > 0 and burst["degrade_rate"] > 0
+    kinds = {e["kind"] for e in burst["events"]}
+    assert "shed" in kinds and "degrade_admission" in kinds
+
+
+def test_recovery_visible_in_reference_schedule(report):
+    ref = next(r for r in report["schedules"] if r["name"] == "reference")
+    kinds = [e["kind"] for e in ref["events"]]
+    assert "eviction" in kinds and "respawn" in kinds
+    respawn = next(e for e in ref["events"] if e["kind"] == "respawn")
+    assert respawn["warm"], "the respawn came up cold (reseed failed)"
+    assert "hedge" in kinds and "retry_backoff" in kinds
+
+
+def test_tail_latency_ordering(report):
+    for r in report["schedules"]:
+        assert 0.0 < r["p50_ms"] <= r["p99_ms"] <= r["max_ms"], r["name"]
+    ff = next(r for r in report["schedules"] if r["name"] == "fault_free")
+    ref = next(r for r in report["schedules"] if r["name"] == "reference")
+    # chaos cannot make the tail better than fault-free
+    assert ref["p99_ms"] >= ff["p99_ms"]
+
+
+def test_extractor_metric_surface(report):
+    metrics = dict(perfci.extract_serve_fleet(report))
+    for name in ("fault_free", "reference", "burst_overload"):
+        for leaf in ("goodput", "slo_handled_rate", "shed_rate",
+                     "degrade_rate", "p50_ms", "p99_ms", "failed",
+                     "evictions", "respawns", "reseeded_entries",
+                     "hedges", "retries"):
+            assert f"serve_fleet/{name}/{leaf}" in metrics
+    # every serve_fleet metric matches a fleet-specific policy, never
+    # falling through to the generic catch-all drift guard
+    for mid in metrics:
+        pol = perfci.policy_for(mid)
+        assert pol.pattern.startswith("serve_fleet/"), (mid, pol.pattern)
+    # the gate's hard bars are wired: identity anchor, goodput floor,
+    # SLO invariant, and the reference p99 ceiling
+    assert perfci.policy_for("serve_fleet/fault_free/goodput").floor == 1.0
+    assert perfci.policy_for("serve_fleet/reference/goodput").floor == 0.9
+    assert perfci.policy_for(
+        "serve_fleet/reference/slo_handled_rate").floor == 1.0
+    assert perfci.policy_for("serve_fleet/reference/p99_ms").ceiling \
+        is not None
+
+
+def test_committed_artifact_matches_fresh_build(report):
+    committed = json.loads((REPO / "BENCH_serve_fleet.json").read_text())
+    fresh = json.loads(json.dumps(report))
+    assert committed == fresh, \
+        "BENCH_serve_fleet.json is stale — rerun benchmarks/serve_fleet_bench"
