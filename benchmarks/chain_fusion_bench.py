@@ -1,0 +1,152 @@
+"""Depth-first chain fusion trajectory: fused vs unfused, machine-readable.
+
+Writes ``BENCH_chain_fusion.json`` at the repo root — for every detected
+single-consumer conv->conv chain in ResNet-50 (the Table-I bottlenecks) and
+Inception-v3 (the tower branches), the modeled HBM traffic and roofline cost
+of the depth-first band-fused execution (DESIGN.md §16) against the unfused
+layer-by-layer execution.
+
+Two budget contexts per network:
+
+  <net>        priced at the live ``REPRO_VMEM_BUDGET`` (the context the
+               perf gate stamps and compares against its baselines)
+  <net>_1mib   always priced at an explicit 1 MiB budget, so the committed
+               16 MiB artifact also records the pressure story
+
+Numbers come from the schedule-resolved models
+(``repro.tune.measure.chain_traffic`` + ``launch.roofline.chain_roofline``)
+so the file is reproducible on any host.  Invariants the perf gate holds
+(repro.perfci): ``traffic_margin`` (unfused/fused HBM) >= 1 on every chain
+in every context — the fallback rule prices an unprofitable chain at
+exactly the unfused sum — and fused chains move 0 intermediate HBM bytes.
+"""
+import json
+import pathlib
+
+from benchmarks.common import bench_out_path, emit
+from repro.core.blocking import VMEM_BUDGET
+from repro.graph.etg import build_etg
+from repro.graph.serving import conv_shapes
+from repro.graph.topology import inception_v3, resnet50
+from repro.launch.roofline import chain_roofline
+from repro.tune.measure import chain_traffic
+
+MINIBATCH = 1                      # serving-path feature: single image
+PRESSURE_BUDGET = 1 << 20          # the always-on 1 MiB pressure context
+SHAPE_FIELDS = ("h", "w", "c", "k", "r", "s", "stride", "padding")
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_chain_fusion.json"
+
+NETWORKS = {
+    "resnet50": (resnet50, (224, 224)),
+    "inception_v3": (inception_v3, (299, 299)),
+}
+
+
+def network_chains(build, image_hw) -> list[dict]:
+    """Detected chains with resolved per-layer shapes, deduped by structure.
+
+    ResNet-50's 16 bottlenecks collapse to the handful of distinct
+    (shape-list) signatures; ``count`` records the multiplicity so totals
+    can still be reconstructed."""
+    etg = build_etg(build(num_classes=1000))
+    by_name = {sh["name"]: sh for sh in conv_shapes(etg, image_hw)}
+    distinct: dict[tuple, dict] = {}
+    for ch in etg.chains:
+        shapes = [{f: by_name[nm][f] for f in SHAPE_FIELDS}
+                  for nm in ch.names]
+        sig = tuple(tuple(sorted(sh.items())) for sh in shapes)
+        if sig in distinct:
+            distinct[sig]["count"] += 1
+        else:
+            distinct[sig] = dict(chain=ch.names[0], layers=list(ch.names),
+                                 halo_growth=list(ch.halo_growth),
+                                 shapes=shapes, count=1)
+    return list(distinct.values())
+
+
+def chain_record(spec: dict, *, vmem_budget: int) -> dict:
+    t = chain_traffic(spec["shapes"], minibatch=MINIBATCH,
+                      vmem_budget=vmem_budget)
+    roof = chain_roofline(t)
+    margin = t["unfused_hbm_bytes"] / max(t["hbm_bytes"], 1.0)
+    return {
+        "chain": spec["chain"],
+        "layers": spec["layers"],
+        "n_layers": len(spec["layers"]),
+        "count": spec["count"],
+        "halo_growth": spec["halo_growth"],
+        "shapes": spec["shapes"],
+        "fused": bool(t["fused"]),
+        "fits_vmem": bool(t["fits_vmem"]),
+        "rb": int(t["rb"]),
+        "n_bands": int(t["n_bands"]),
+        "vmem_working_set": int(t["vmem_bytes"]),
+        "hbm_bytes": int(t["hbm_bytes"]),
+        "unfused_hbm_bytes": int(t["unfused_hbm_bytes"]),
+        "traffic_margin": round(margin, 4),
+        "intermediate_bytes": int(t["intermediate_bytes"]),
+        "unfused_intermediate_bytes": int(t["unfused_intermediate_bytes"]),
+        "cost_us": round(roof["cost_s"] * 1e6, 3),
+        "unfused_cost_us": round(roof["unfused_cost_s"] * 1e6, 3),
+        "speedup": round(roof["speedup"], 4),
+        "roofline_efficiency": round(roof["efficiency"], 4),
+        "launches": int(roof["launches"]),
+    }
+
+
+def _table(specs: list[dict], *, vmem_budget: int) -> dict:
+    recs = [chain_record(sp, vmem_budget=vmem_budget) for sp in specs]
+    fused = [r for r in recs if r["fused"]]
+    return {
+        "vmem_budget": vmem_budget,
+        "chains": recs,
+        "summary": {
+            "n_chains": len(recs),
+            "n_fused": len(fused),
+            "min_traffic_margin": round(min(r["traffic_margin"]
+                                            for r in recs), 4),
+            "fused_intermediate_bytes": sum(r["intermediate_bytes"]
+                                            for r in fused),
+            "hbm_saved_bytes": sum(r["unfused_hbm_bytes"] - r["hbm_bytes"]
+                                   for r in recs),
+        },
+    }
+
+
+def build_report() -> dict:
+    tables = {}
+    for net, (build, image_hw) in NETWORKS.items():
+        specs = network_chains(build, image_hw)
+        tables[net] = _table(specs, vmem_budget=VMEM_BUDGET)
+        tables[f"{net}_1mib"] = _table(specs, vmem_budget=PRESSURE_BUDGET)
+    return {
+        "minibatch": MINIBATCH,
+        "vmem_budget": VMEM_BUDGET,
+        "pressure_budget": PRESSURE_BUDGET,
+        "model": "tpu-v5e roofline (repro.tune.measure.chain_traffic)",
+        "tables": tables,
+    }
+
+
+def main(argv=None) -> None:
+    report = build_report()
+    out_path = bench_out_path(OUT_PATH)
+    out_path.write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    for tname, table in report["tables"].items():
+        for rec in table["chains"]:
+            emit(f"chain_fusion_{tname}_{rec['chain']}", rec["cost_us"],
+                 f"fused={int(rec['fused'])};rb={rec['rb']};"
+                 f"margin={rec['traffic_margin']};"
+                 f"inter_bytes={rec['intermediate_bytes']};"
+                 f"speedup={rec['speedup']}")
+        s = table["summary"]
+        emit(f"chain_fusion_{tname}_summary", 0,
+             f"n_chains={s['n_chains']};n_fused={s['n_fused']};"
+             f"min_margin={s['min_traffic_margin']};"
+             f"fused_inter_bytes={s['fused_intermediate_bytes']}")
+    emit("chain_fusion_bench_json", 0, f"wrote={out_path}")
+
+
+if __name__ == "__main__":
+    main()

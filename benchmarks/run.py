@@ -10,6 +10,9 @@ tables).  Prints ``name,us_per_call,derived`` CSV rows.
   Fig 8            -> reduced_precision_bench (int8 weights, §II-K analog)
   Fig 9            -> scaling_bench         (strong scaling, overlap model)
   §II-G/GxM        -> fusion_bench          (fused vs unfused + ETG stats)
+  DESIGN.md §16    -> chain_fusion_bench    (depth-first conv chains, fused
+                                             vs unfused traffic ->
+                                             BENCH_chain_fusion.json)
   §II-H            -> streams_bench         (dryrun/segments accounting)
   §II-D            -> autotune_bench        (tuned vs heuristic blocking)
   §III serving     -> serve_cnn_bench       (images/sec × batch × devices)
@@ -54,18 +57,19 @@ import sys
 import tempfile
 import traceback
 
-from benchmarks import (autotune_bench, bwd_wu_layers, conv_fwd_bench,
-                        fusion_bench, inception_bench, lm_roofline_table,
-                        moe_streams_bench, reduced_precision_bench,
-                        resilience_bench, resnet50_layers, scaling_bench,
-                        serve_cnn_bench, serve_fleet_bench, streams_bench,
-                        train_scaling_bench)
+from benchmarks import (autotune_bench, bwd_wu_layers, chain_fusion_bench,
+                        conv_fwd_bench, fusion_bench, inception_bench,
+                        lm_roofline_table, moe_streams_bench,
+                        reduced_precision_bench, resilience_bench,
+                        resnet50_layers, scaling_bench, serve_cnn_bench,
+                        serve_fleet_bench, streams_bench, train_scaling_bench)
 
 MODULES = [
     ("conv_fwd_bench", conv_fwd_bench),
     ("resnet50_layers", resnet50_layers),
     ("bwd_wu_layers", bwd_wu_layers),
     ("fusion_bench", fusion_bench),
+    ("chain_fusion_bench", chain_fusion_bench),
     ("inception_bench", inception_bench),
     ("streams_bench", streams_bench),
     ("reduced_precision_bench", reduced_precision_bench),
@@ -87,6 +91,7 @@ DRY_CALLS = [
     ("autotune_bench", lambda: autotune_bench.main(limit=4)),
     ("serve_cnn_bench", lambda: serve_cnn_bench.main(["--dry"])),
     ("conv_fwd_bench", lambda: conv_fwd_bench.main([])),
+    ("chain_fusion_bench", lambda: chain_fusion_bench.main([])),
     ("bwd_wu_layers", lambda: bwd_wu_layers.main([])),
     ("train_scaling_bench", lambda: train_scaling_bench.main([])),
     ("reduced_precision_q8", lambda: reduced_precision_bench.main_q8()),

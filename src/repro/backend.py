@@ -38,6 +38,14 @@ the DP CNN train step: "off" (default) reduces f32 gradients exactly;
 error-feedback int8 quantization, 1/4 the all-reduce bytes, residual
 carried in the train state.  See DESIGN.md §11.
 
+Depth-first chain fusion (``REPRO_CHAIN_FUSION`` / ``set_chain_fusion``)
+gates the cross-layer band-fusion path (DESIGN.md §16): "off" (default)
+runs every conv task layer-by-layer; "on" lets the GxM inference executor
+run detected single-consumer conv->conv chains band-by-band through
+``kernels.conv2d_chain`` — the intermediate activation never materializes
+in HBM — falling back per-chain to unfused whenever the combined band
+working set exceeds ``REPRO_VMEM_BUDGET`` (or fusion is unprofitable).
+
 Quantized inference (``REPRO_QUANTIZE`` / ``set_quantize``) is the per-model
 opt-in for the §II-K int8 serving path: "off" (default) runs f32 convs;
 "int8" makes ``GxM``/``CnnInferenceEngine`` built without an explicit
@@ -56,12 +64,20 @@ _VALID_CONV_TILING = ("tiled", "whole")
 _VALID_BWD_DUALITY = ("phase", "dilate")
 _VALID_GRAD_COMPRESS = ("off", "int8")
 _VALID_QUANTIZE = ("off", "int8")
+_VALID_CHAIN_FUSION = ("off", "on")
 _backend = os.environ.get("REPRO_BACKEND", "xla")
 _autotune = os.environ.get("REPRO_AUTOTUNE", "off")
 _conv_tiling = os.environ.get("REPRO_CONV_TILING", "tiled")
 _bwd_duality = os.environ.get("REPRO_BWD_DUALITY", "phase")
 _grad_compress = os.environ.get("REPRO_GRAD_COMPRESS", "off")
 _quantize = os.environ.get("REPRO_QUANTIZE", "off")
+_chain_fusion = os.environ.get("REPRO_CHAIN_FUSION", "off")
+if _chain_fusion not in _VALID_CHAIN_FUSION:
+    import sys
+    print(f"repro.backend: ignoring invalid REPRO_CHAIN_FUSION="
+          f"{_chain_fusion!r} (valid: {', '.join(_VALID_CHAIN_FUSION)}); "
+          f"using off", file=sys.stderr)
+    _chain_fusion = "off"
 if _quantize not in _VALID_QUANTIZE:
     import sys
     print(f"repro.backend: ignoring invalid REPRO_QUANTIZE="
@@ -253,4 +269,35 @@ def use_quantize(mode: str):
 def resolve_quantize(mode: str | None) -> str:
     mode = mode or _quantize
     assert mode in _VALID_QUANTIZE, mode
+    return mode
+
+
+def get_chain_fusion() -> str:
+    """Depth-first chain-fusion opt-in: "off" = layer-by-layer conv tasks
+    (default); "on" = run single-consumer conv->conv chains band-by-band
+    (``kernels.conv2d_chain``), intermediates never touching HBM, with a
+    per-chain VMEM/profitability fallback.  DESIGN.md §16."""
+    return _chain_fusion
+
+
+def set_chain_fusion(mode: str) -> None:
+    global _chain_fusion
+    assert mode in _VALID_CHAIN_FUSION, mode
+    _chain_fusion = mode
+
+
+@contextmanager
+def use_chain_fusion(mode: str):
+    global _chain_fusion
+    prev = _chain_fusion
+    set_chain_fusion(mode)
+    try:
+        yield
+    finally:
+        _chain_fusion = prev
+
+
+def resolve_chain_fusion(mode: str | None) -> str:
+    mode = mode or _chain_fusion
+    assert mode in _VALID_CHAIN_FUSION, mode
     return mode

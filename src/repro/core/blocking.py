@@ -223,6 +223,98 @@ def conv_blocking(*, h: int, w: int, c: int, k: int, r: int, s: int,
                                   kind=kind)
 
 
+# -- depth-first chain residency (DESIGN.md §16) -----------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainBlocking:
+    """Band split for a depth-first conv->conv chain.
+
+    ``rb`` is the number of *final-layer* output rows per interleaved band
+    step; upstream band heights follow from the halo recurrence.  ``fits``
+    is False when even a one-row band blows the budget — the per-chain
+    fallback rule (execute unfused) keys off it.
+    """
+    rb: int            # final-layer output rows per band step
+    n_bands: int
+    vmem_bytes: int    # peak per-step working set at this rb
+    fits: bool
+
+
+def chain_working_set(layers, *, rows_out: int, dtype_bytes: int = 4,
+                      blockings=None) -> int:
+    """Peak per-band-step VMEM bytes of a depth-first chain.
+
+    ``layers`` is a list of dicts with each conv's input-plane shape
+    (h, w, c) and kernel geometry (k, r, s, stride, padding), producers
+    first.  ``rows_out`` is the final layer's output rows per band; each
+    upstream band height follows the exact halo recurrence
+    (``fusion.chain_band_rows``).  Bands are handed off eagerly — while
+    layer l computes, only its input band (= layer l-1's output band),
+    weight block, and output band + accumulator are live — so the chain
+    peak is the max over layers of the PR-3/4 per-step residency model
+    (``conv_working_set``) evaluated at that layer's band height.
+    """
+    from repro.core.fusion import chain_band_rows
+    rs = [(L["r"], L["stride"], L["padding"]) for L in layers]
+    rows = chain_band_rows(rs, rows_out)
+    peak = 0
+    for l, L in enumerate(layers):
+        p = (L["h"] + 2 * L["padding"] - L["r"]) // L["stride"] + 1
+        q = (L["w"] + 2 * L["padding"] - L["s"]) // L["stride"] + 1
+        blk = (blockings[l] if blockings is not None else
+               conv_blocking_analytic(h=L["h"], w=L["w"], c=L["c"], k=L["k"],
+                                      r=L["r"], s=L["s"], stride=L["stride"],
+                                      padding=L["padding"],
+                                      dtype_bytes=dtype_bytes))
+        ws = conv_working_set(h=L["h"], w=L["w"], c=L["c"], k_blk=blk.k_blk,
+                              r=L["r"], s=L["s"], q=q,
+                              rb_p=min(rows[l + 1], p),
+                              padding=L["padding"], dtype_bytes=dtype_bytes,
+                              stride=L["stride"], c_blk=blk.c_blk,
+                              rb_q=blk.rb_q)
+        peak = max(peak, ws)
+    return peak
+
+
+def chain_blocking(layers, *, vmem_budget: int | None = None,
+                   dtype_bytes: int = 4, blockings=None) -> ChainBlocking:
+    """Largest final-layer band height whose chain working set fits VMEM.
+
+    The working set is monotone in ``rows_out`` (every term grows with the
+    band), so binary search finds the largest fitting band; ``rb = P_final``
+    degenerates to a single band (zero halo refetch).  When even one row
+    does not fit, returns ``fits=False`` — the executor then runs the chain
+    unfused (DESIGN.md §16 fallback rule).
+    """
+    vmem_budget = VMEM_BUDGET if vmem_budget is None else vmem_budget
+    last = layers[-1]
+    p_final = (last["h"] + 2 * last["padding"] - last["r"]) // last["stride"] + 1
+    if blockings is None:
+        blockings = [conv_blocking_analytic(
+            h=L["h"], w=L["w"], c=L["c"], k=L["k"], r=L["r"], s=L["s"],
+            stride=L["stride"], padding=L["padding"], dtype_bytes=dtype_bytes)
+            for L in layers]
+
+    def ws(rb):
+        return chain_working_set(layers, rows_out=rb, dtype_bytes=dtype_bytes,
+                                 blockings=blockings)
+
+    best = 0
+    lo, hi = 1, p_final
+    while lo <= hi:
+        mid = (lo + hi) // 2
+        if ws(mid) <= vmem_budget:
+            best, lo = mid, mid + 1
+        else:
+            hi = mid - 1
+    if best == 0:
+        return ChainBlocking(rb=1, n_bands=p_final, vmem_bytes=ws(1),
+                             fits=False)
+    return ChainBlocking(rb=best, n_bands=math.ceil(p_final / best),
+                         vmem_bytes=ws(best), fits=True)
+
+
 @dataclasses.dataclass(frozen=True)
 class MatmulBlocking:
     bm: int

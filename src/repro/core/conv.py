@@ -64,6 +64,18 @@ def conv2d_fwd(x, w, *, stride=1, padding=1, bias=None, scale=None,
                          interpret=(impl == "interpret"))
 
 
+def conv2d_chain_fwd(x, layers, *, rb, impl=None, autotune=None):
+    """Depth-first fused conv chain (DESIGN.md §16): run single-consumer
+    conv->conv ``layers`` band-by-band so no intermediate activation
+    materializes in HBM.  Per-band dispatch follows the same rule as
+    ``conv2d_fwd`` (XLA/non-lane-aligned layers take the reference path),
+    with each layer's blocking pinned to its full shape — which makes the
+    result bit-identical to the unfused layer-by-layer execution."""
+    from repro.kernels.conv2d_chain import conv2d_chain
+    return conv2d_chain(x, layers, rb=rb, impl=be.resolve(impl),
+                        autotune=autotune)
+
+
 def conv2d_q8_fwd(x, w_q, *, x_scale, w_scale, stride=1, padding=1,
                   bias=None, scale=None, shift=None, residual=None,
                   relu=False, impl=None, autotune=None):

@@ -26,6 +26,8 @@ import numpy as np
 FLAG_INIT = 1       # first visit of this output tile: zero the accumulator
 FLAG_EPILOGUE = 2   # last visit: apply the fused L() and write back
 FLAG_RELU = 4       # L() includes ReLU
+FLAG_HANDOFF = 8    # depth-first hand-off: this step's output band feeds the
+                    # next chain layer directly from VMEM (no HBM write-back)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +74,82 @@ def build_conv_schedule(*, n: int, k_b: int, p_b: int, c_b: int,
         n_ids=cols["n"].astype(np.int32), kb_ids=cols["k"].astype(np.int32),
         pb_ids=cols["p"].astype(np.int32), cb_ids=cb.astype(np.int32),
         flags=flags, segments=tuple(segments), grid=(n, k_b, p_b, c_b))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainSchedule:
+    """Interleaved depth-first replay schedule for a conv->conv chain
+    (DESIGN.md §16): producer band step -> consumer band step, repeated per
+    final-layer output band.  Every step is a complete band micro-conv
+    (INIT|EPILOGUE); non-final steps carry FLAG_HANDOFF — their output band
+    stays in VMEM as the next step's input and never reaches HBM.
+
+    ``o0``/``o1`` are the step's *output-row* range at its layer (real,
+    clipped coordinates) — the replay engine computes exactly these rows,
+    so the band math lives here, not in the kernel.
+    """
+    layer_ids: np.ndarray   # chain-layer index per step
+    band_ids: np.ndarray    # final-layer band index per step
+    o0: np.ndarray          # first output row of this step's band
+    o1: np.ndarray          # one-past-last output row
+    flags: np.ndarray
+    segments: tuple         # RLE segments: (flags, start, length)
+    grid: tuple             # (n_layers, n_bands)
+
+    def __len__(self):
+        return len(self.layer_ids)
+
+
+def build_chain_schedule(*, rs, h_in: int, rb: int) -> ChainSchedule:
+    """Dryrun for a depth-first chain: emit one interleaved schedule.
+
+    ``rs`` is the per-layer (r, stride, padding) list, producers first;
+    ``h_in`` the chain input height; ``rb`` the final-layer output rows per
+    band.  Per band, needed output rows are back-propagated through the
+    exact halo recurrence — out rows [o0, o1) of layer l+1 need real rows
+    [o0*s - pad, (o1-1)*s + r - pad) of its input, clipped at the plane
+    edges — then steps are emitted producer-first.  Consecutive bands of
+    non-final layers overlap by the (r-1)*stride halo; those rows are
+    recomputed, which is the price ``chain_traffic`` charges instead of an
+    intermediate HBM round-trip.
+    """
+    rs = [tuple(t) for t in rs]
+    n_layers = len(rs)
+    p = []                          # per-layer output rows
+    h = h_in
+    for r, stride, pad in rs:
+        h = (h + 2 * pad - r) // stride + 1
+        p.append(h)
+    n_bands = -(-p[-1] // rb)
+
+    layer_ids, band_ids, o0s, o1s, flags = [], [], [], [], []
+    for b in range(n_bands):
+        o = [None] * n_layers
+        o[-1] = (b * rb, min((b + 1) * rb, p[-1]))
+        for l in range(n_layers - 2, -1, -1):
+            lo, hi = o[l + 1]
+            r, stride, pad = rs[l + 1]
+            o[l] = (max(lo * stride - pad, 0),
+                    min((hi - 1) * stride + r - pad, p[l]))
+        for l in range(n_layers):
+            assert o[l][1] > o[l][0], (b, l, o)
+            layer_ids.append(l)
+            band_ids.append(b)
+            o0s.append(o[l][0])
+            o1s.append(o[l][1])
+            f = FLAG_INIT | FLAG_EPILOGUE
+            if l < n_layers - 1:
+                f |= FLAG_HANDOFF
+            flags.append(f)
+
+    flags = np.asarray(flags, dtype=np.int32)
+    return ChainSchedule(
+        layer_ids=np.asarray(layer_ids, dtype=np.int32),
+        band_ids=np.asarray(band_ids, dtype=np.int32),
+        o0=np.asarray(o0s, dtype=np.int32),
+        o1=np.asarray(o1s, dtype=np.int32),
+        flags=flags, segments=tuple(rle_segments(flags)),
+        grid=(n_layers, n_bands))
 
 
 def rle_segments(flags: np.ndarray):

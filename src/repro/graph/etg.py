@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.fusion import Node, fuse_network, fusion_stats
+from repro.core.fusion import (Node, detect_chains, fuse_network,
+                               fusion_stats)
 
 
 @dataclasses.dataclass
@@ -20,6 +21,7 @@ class ETG:
     tasks: list            # topo-ordered Nodes
     kernel_cache: dict     # conv signature -> cache id (dedup'd JIT entries)
     stats: dict
+    chains: list = dataclasses.field(default_factory=list)  # fusion.Chain
 
 
 def extend_nl(nodes: list[Node]) -> list[Node]:
@@ -125,5 +127,16 @@ def build_etg(nl: list[Node], *, fuse: bool = True,
             if t.op == "conv":
                 t.attrs["kernel_kind"] = "q8"
     cache = _assign_kernel_ids(tasks)
-    return ETG(tasks=tasks, kernel_cache=cache,
-               stats=fusion_stats(enl, fused))
+    # depth-first conv->conv chains (DESIGN.md §16): pure metadata — the
+    # task list is unchanged; the executor decides per chain (and only with
+    # the REPRO_CHAIN_FUSION knob on) whether to run it band-fused
+    chains = detect_chains(tasks) if fuse else []
+    by_name = {t.name: t for t in tasks}
+    for ci, ch in enumerate(chains):
+        for pos, name in enumerate(ch.names):
+            by_name[name].attrs["chain_id"] = ci
+            by_name[name].attrs["chain_pos"] = pos
+    stats = fusion_stats(enl, fused)
+    stats["chains"] = len(chains)
+    stats["chained_convs"] = sum(len(c) for c in chains)
+    return ETG(tasks=tasks, kernel_cache=cache, stats=stats, chains=chains)

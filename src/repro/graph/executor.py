@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.conv import conv2d_train, conv2d_fwd, conv2d_q8_fwd
+from repro.core.conv import (conv2d_chain_fwd, conv2d_train, conv2d_fwd,
+                             conv2d_q8_fwd)
 from repro.graph.etg import ETG, build_etg
 
 
@@ -93,6 +94,54 @@ class GxM:
                 params[t.name] = {"w": w, "b": jnp.zeros((a["k"],), dtype)}
         return params
 
+    # -- depth-first chains (DESIGN.md §16) ---------------------------------
+    def _task(self, name):
+        by_name = getattr(self, "_task_by_name", None)
+        if by_name is None:
+            by_name = self._task_by_name = {t.name: t for t in self.etg.tasks}
+        return by_name[name]
+
+    def _plan_chain(self, ch, params, x):
+        """Per-chain fuse/fallback decision at the chain's entry task.
+        Returns the band plan, or None to run the chain layer-by-layer:
+        quantized chains stay unfused (the q8 kernel has its own banding),
+        as do chains whose combined band blows ``REPRO_VMEM_BUDGET`` or
+        whose fused traffic would exceed the unfused sum."""
+        from repro.tune.measure import chain_traffic
+        if any("w_q" in params[name] for name in ch.names):
+            return None
+        h, w = int(x.shape[1]), int(x.shape[2])
+        shapes = []
+        for name in ch.names:
+            a = self._task(name).attrs
+            shapes.append(dict(h=h, w=w, c=a["c"], k=a["k"], r=a["r"],
+                               s=a["s"], stride=a["stride"],
+                               padding=a["padding"],
+                               dtype_bytes=x.dtype.itemsize))
+            h = (h + 2 * a["padding"] - a["r"]) // a["stride"] + 1
+            w = (w + 2 * a["padding"] - a["s"]) // a["stride"] + 1
+        t = chain_traffic(shapes, minibatch=int(x.shape[0]))
+        return {"rb": t["rb"]} if t["fused"] else None
+
+    def _chain_layer(self, name, params, get, folded):
+        """Assemble one chain layer's kernel+epilogue dict — the same
+        BN-fold / bias / residual / relu the unfused inference branch
+        passes to ``conv2d_fwd``, so the fused replay is bit-identical."""
+        t = self._task(name)
+        p = params[name]
+        a = t.attrs
+        layer = dict(w=p["w"], stride=a["stride"], padding=a["padding"])
+        for kind, attrs in t.fused:
+            if kind == "bn":
+                layer["scale"], layer["shift"] = folded(p)
+            elif kind == "bias":
+                layer["bias"] = p["bias"]
+            elif kind == "relu":
+                layer["relu"] = True
+            elif kind == "add":
+                layer["residual"] = get(attrs["residual"])
+        return layer
+
     # -- forward ------------------------------------------------------------
     def forward(self, params, x, *, train: bool = True,
                 collect_stats: bool = False, tap=None):
@@ -114,11 +163,46 @@ class GxM:
             inv = jax.lax.rsqrt(p["var"] + 1e-5)
             return p["scale"] * inv, p["shift"] - p["scale"] * p["mean"] * inv
 
+        # depth-first chain fusion (DESIGN.md §16): inference-only, behind
+        # the REPRO_CHAIN_FUSION knob; calibration taps need every per-layer
+        # input, so a tapped forward always runs layer-by-layer
+        from repro import backend as be
+        chain_of = {}
+        if (not train and tap is None and self.etg.chains
+                and be.get_chain_fusion() == "on"):
+            for ch in self.etg.chains:
+                for pos, name in enumerate(ch.names):
+                    chain_of[name] = (ch, pos)
+        chain_plans: dict = {}
+
         for t in self.etg.tasks:
             a = t.attrs
             if t.op == "input":
                 continue
-            elif t.op == "conv":
+            elif t.op == "conv" and t.name in chain_of:
+                ch, pos = chain_of[t.name]
+                if pos == 0:
+                    # decide once per chain, at its entry (the input tensor's
+                    # spatial shape is known here): fuse iff the combined
+                    # band fits VMEM and fusion is profitable
+                    chain_plans[ch.names] = self._plan_chain(
+                        ch, params, get(t.inputs[0]))
+                plan = chain_plans[ch.names]
+                if plan is None:
+                    pass                    # fallback: run layer-by-layer
+                elif pos < len(ch.names) - 1:
+                    continue                # band stays live in the replay
+                else:
+                    out = conv2d_chain_fwd(
+                        get(self._task(ch.names[0]).inputs[0]),
+                        [self._chain_layer(n2, params, get, folded)
+                         for n2 in ch.names],
+                        rb=plan["rb"], impl=self.impl)
+                    tensors[t.name] = out
+                    if "output_name" in a:
+                        tensors[a["output_name"]] = out
+                    continue
+            if t.op == "conv":
                 inp = get(t.inputs[0])
                 if tap is not None:
                     tap(t.name, inp)

@@ -32,6 +32,10 @@ KERNEL_ROOFLINE_KEYS = ("compute_s", "memory_s", "step_time_s", "cost_s",
                         "dominant", "efficiency")
 COMPOSITE_ROOFLINE_KEYS = ("cost_s", "flops", "hbm_bytes", "n_steps",
                            "launches", "efficiency")
+CHAIN_ROOFLINE_KEYS = ("cost_s", "unfused_cost_s", "speedup", "flops",
+                       "hbm_bytes", "unfused_hbm_bytes",
+                       "intermediate_bytes", "launches", "efficiency",
+                       "fused")
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -199,6 +203,36 @@ def composite_roofline(parts: list[dict], *, extra_hbm_bytes: float = 0.0,
         "n_steps": steps,
         "launches": len(parts),
         "efficiency": ideal / cost if cost > 0 else 0.0,
+    }
+
+
+def chain_roofline(chain_t: dict, *,
+                   step_overhead_s: float = STEP_OVERHEAD_S) -> dict:
+    """Roofline for a depth-first fused conv chain (DESIGN.md §16).
+
+    ``chain_t`` is a ``repro.tune.measure.chain_traffic`` dict.  The fused
+    cost composites the per-band-step launches of the interleaved schedule
+    (hand-off bands already priced at 0 HBM bytes); the unfused cost
+    composites the layer-by-layer launches.  When the chain fell back
+    (``fused=False``) the two are identical by construction — the fallback
+    rule — so ``speedup`` is exactly 1.0 there.
+    """
+    fused_roof = composite_roofline(chain_t["parts"],
+                                    step_overhead_s=step_overhead_s)
+    unfused_roof = composite_roofline(chain_t["unfused_parts"],
+                                      step_overhead_s=step_overhead_s)
+    cost = fused_roof["cost_s"]
+    return {
+        "cost_s": cost,
+        "unfused_cost_s": unfused_roof["cost_s"],
+        "speedup": unfused_roof["cost_s"] / cost if cost > 0 else 0.0,
+        "flops": fused_roof["flops"],
+        "hbm_bytes": chain_t["hbm_bytes"],
+        "unfused_hbm_bytes": chain_t["unfused_hbm_bytes"],
+        "intermediate_bytes": chain_t["intermediate_bytes"],
+        "launches": fused_roof["launches"],
+        "efficiency": fused_roof["efficiency"],
+        "fused": chain_t["fused"],
     }
 
 

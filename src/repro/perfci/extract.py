@@ -29,6 +29,11 @@ bump ``SCHEMA_VERSION``.
   serve_fleet/{schedule}/{goodput|slo_handled_rate|shed_rate|degrade_rate|
                           p50_ms|p99_ms|failed|evictions|respawns|
                           reseeded_entries|hedges|retries}
+  chain_fusion/{table}/{chain}/{fused|traffic_margin|hbm_bytes|
+                                intermediate_bytes|cost_us|speedup|
+                                roofline_efficiency}
+  chain_fusion/{table}/{n_chains|n_fused|min_traffic_margin|
+                        fused_intermediate_bytes}
 
 Margins are ratios >= 1.0 by construction of the paper's claims ("tiled
 never slower than whole-plane", "zero-free duality never moves more
@@ -48,7 +53,9 @@ import pathlib
 # v3: + the resilience bench (BENCH_resilience.json, goodput under faults)
 # v4: + the serve_fleet bench (BENCH_serve_fleet.json, serving SLO metrics
 #     under replica chaos)
-SCHEMA_VERSION = 4
+# v5: + the chain_fusion bench (BENCH_chain_fusion.json, depth-first fused
+#     conv chains vs unfused)
+SCHEMA_VERSION = 5
 
 # bench-name -> committed artifact filename (repo root)
 BENCH_FILES = {
@@ -58,6 +65,7 @@ BENCH_FILES = {
     "q8_infer": "BENCH_q8_infer.json",
     "resilience": "BENCH_resilience.json",
     "serve_fleet": "BENCH_serve_fleet.json",
+    "chain_fusion": "BENCH_chain_fusion.json",
 }
 
 _EPS = 1e-12
@@ -169,6 +177,29 @@ def extract_serve_fleet(report: dict) -> dict[str, float]:
     return out
 
 
+def extract_chain_fusion(report: dict) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for tname, table in report["tables"].items():
+        for rec in table["chains"]:
+            base = f"chain_fusion/{tname}/{rec['chain']}"
+            out[f"{base}/fused"] = float(rec["fused"])
+            out[f"{base}/traffic_margin"] = rec["traffic_margin"]
+            out[f"{base}/hbm_bytes"] = float(rec["hbm_bytes"])
+            out[f"{base}/intermediate_bytes"] = \
+                float(rec["intermediate_bytes"])
+            out[f"{base}/cost_us"] = rec["cost_us"]
+            out[f"{base}/speedup"] = rec["speedup"]
+            out[f"{base}/roofline_efficiency"] = rec["roofline_efficiency"]
+        s = table["summary"]
+        out[f"chain_fusion/{tname}/n_chains"] = float(s["n_chains"])
+        out[f"chain_fusion/{tname}/n_fused"] = float(s["n_fused"])
+        out[f"chain_fusion/{tname}/min_traffic_margin"] = \
+            s["min_traffic_margin"]
+        out[f"chain_fusion/{tname}/fused_intermediate_bytes"] = \
+            float(s["fused_intermediate_bytes"])
+    return out
+
+
 _EXTRACTORS = {
     "conv_fwd": extract_conv_fwd,
     "bwd_wu": extract_bwd_wu,
@@ -176,6 +207,7 @@ _EXTRACTORS = {
     "q8_infer": extract_q8_infer,
     "resilience": extract_resilience,
     "serve_fleet": extract_serve_fleet,
+    "chain_fusion": extract_chain_fusion,
 }
 
 
@@ -207,7 +239,8 @@ def context_key(reports: dict[str, dict]) -> str:
     # scaling model and the fault-schedule replays are budget-independent
     # by construction)
     budgets = {reports[b]["vmem_budget"]
-               for b in ("conv_fwd", "bwd_wu", "q8_infer") if b in reports}
+               for b in ("conv_fwd", "bwd_wu", "q8_infer", "chain_fusion")
+               if b in reports}
     if len(budgets) > 1:
         raise ValueError(f"perfci: bench artifacts disagree on vmem_budget "
                          f"{sorted(budgets)} — regenerate them in one run")

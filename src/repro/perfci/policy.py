@@ -118,6 +118,32 @@ DEFAULT_POLICIES: tuple[Tolerance, ...] = (
     # context (pressure shrinks f32 bands 4x harder than int8 bands)
     Tolerance("q8_infer/*/speedup", "higher", 0.02, floor=1.0,
               note="directional invariant: int8 never slower than f32"),
+    # the PR-10 depth-first chain-fusion bars (BENCH_chain_fusion.json).
+    # traffic_margin (unfused/fused HBM bytes) is floored at 1.0 in *every*
+    # VMEM context — unlike the whole-plane margins this is not a claim
+    # about geometry but about the decision rule: an unprofitable chain
+    # falls back and is priced at exactly the unfused sum, so the ratio can
+    # never dip below 1 unless the fallback rule itself breaks.  These
+    # precede _MARGIN_FLOOR so policies_for_context's pressure swap never
+    # reaches them.
+    Tolerance("chain_fusion/*margin", "higher", 0.02, floor=1.0,
+              note="ISSUE invariant: fused HBM <= unfused on every chain, "
+                   "every context (fallback prices unfused exactly)"),
+    Tolerance("chain_fusion/*/fused_intermediate_bytes", "lower", 0.0,
+              ceiling=0.0, note="ISSUE invariant: fused chains move zero "
+                                "intermediate HBM bytes"),
+    Tolerance("chain_fusion/*/n_fused", "higher", 0.0, floor=1.0,
+              note="at least one chain must fuse in every context"),
+    Tolerance("chain_fusion/*/n_chains", "both", 0.0,
+              note="chain detection is a structure fact: exact match"),
+    # fuse decisions and per-chain intermediate bytes are decision facts: a
+    # fused chain un-fusing (or starting to spill intermediates) is a
+    # behavior change, not noise
+    Tolerance("chain_fusion/*/fused", "higher", 0.0),
+    Tolerance("chain_fusion/*/intermediate_bytes", "lower", 0.0),
+    # fused-vs-unfused modeled speedup may sit below 1.0 under pressure
+    # (band launch overhead) — drift-gated, the fuse *decision* is by bytes
+    Tolerance("chain_fusion/*/speedup", "higher", 0.02),
     # directional invariants: tiled/phase must never lose to the legacy plan
     _MARGIN_FLOOR,
     # every gated kernel must stay schedulable under the context's budget

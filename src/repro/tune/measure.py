@@ -47,6 +47,12 @@ STEP_OVERHEAD_US = STEP_OVERHEAD_S * 1e6
 CONV_TRAFFIC_KEYS = ("flops", "util", "x_bytes", "w_bytes", "o_bytes",
                      "hbm_bytes", "n_steps", "extents")
 
+# Stable keys of the ``chain_traffic`` decision dict (DESIGN.md §16).
+CHAIN_TRAFFIC_KEYS = ("fused", "fits_vmem", "rb", "n_bands", "vmem_bytes",
+                      "flops", "x_bytes", "w_bytes", "o_bytes", "hbm_bytes",
+                      "intermediate_bytes", "unfused_hbm_bytes",
+                      "unfused_intermediate_bytes", "n_steps", "n_layers")
+
 
 def _tile_util(extent: int) -> float:
     """Occupancy of a 128-wide MXU dimension holding `extent` elements."""
@@ -233,6 +239,115 @@ def conv_cost_us(shape: dict, blk: ConvBlocking, *, minibatch: int = 1,
     roof = kernel_roofline(flops=t["flops"], hbm_bytes=t["hbm_bytes"],
                            util=t["util"], n_steps=0)
     return roof["step_time_s"] * 1e6 + t["n_steps"] * STEP_OVERHEAD_US
+
+
+def chain_traffic(shapes: list, *, minibatch: int = 1,
+                  vmem_budget: int | None = None) -> dict:
+    """Price a depth-first conv->conv chain against its unfused execution
+    and decide whether to fuse it (DESIGN.md §16).
+
+    ``shapes`` is the per-layer conv shape dict list, producers first.  The
+    fused price replays the exact interleaved band schedule
+    (``core.streams.build_chain_schedule``) and charges, per band step, the
+    per-layer ``conv_traffic`` of that band under the *full-shape* blocking:
+
+      * layer-0 input bands come from HBM — overlapping halo rows between
+        consecutive bands are charged again (refetched halos, honestly);
+      * every hand-off band (FLAG_HANDOFF) is VMEM-resident — its input-read
+        and output-write terms are 0 HBM bytes, the depth-first dividend;
+      * weight blocks are charged per band step (they cycle out of VMEM
+        while the other chain layers run), same granularity as unfused;
+      * only the final layer's output bands are written back.
+
+    Decision (the per-chain fallback rule): fuse iff the combined band
+    working set fits ``vmem_budget`` (``core.blocking.chain_blocking``) AND
+    the fused HBM bytes do not exceed the unfused sum — halo recompute can
+    lose on adversarial geometry, and an unprofitable chain simply runs
+    layer-by-layer.  On fallback the reported traffic *is* the unfused sum.
+
+    Returns ``CHAIN_TRAFFIC_KEYS`` plus ``parts``/``unfused_parts`` (the
+    per-launch ``conv_traffic`` dicts, for ``launch.roofline.chain_roofline``).
+    """
+    from repro.core.blocking import chain_blocking, conv_blocking_analytic
+    from repro.core.streams import FLAG_HANDOFF, build_chain_schedule
+
+    n = minibatch
+    dtype_bytes = shapes[0].get("dtype_bytes", 4)
+    blks, unfused_parts, dims = [], [], []
+    for sh in shapes:
+        blk = conv_blocking_analytic(
+            h=sh["h"], w=sh["w"], c=sh["c"], k=sh["k"], r=sh["r"], s=sh["s"],
+            stride=sh["stride"], padding=sh["padding"],
+            dtype_bytes=sh.get("dtype_bytes", 4))
+        blks.append(blk)
+        unfused_parts.append(conv_traffic(sh, blk, minibatch=n))
+        dims.append((out_dim(sh["h"], sh["r"], sh["stride"], sh["padding"]),
+                     out_dim(sh["w"], sh["s"], sh["stride"], sh["padding"])))
+    unfused_hbm = sum(p["hbm_bytes"] for p in unfused_parts)
+    # unfused: every intermediate activation round-trips HBM (write + read)
+    unfused_inter = sum(2.0 * dims[l][0] * dims[l][1] * shapes[l]["k"]
+                        * shapes[l].get("dtype_bytes", 4) * n
+                        for l in range(len(shapes) - 1))
+
+    cb = chain_blocking(shapes, vmem_budget=vmem_budget,
+                        dtype_bytes=dtype_bytes, blockings=blks)
+    sched = build_chain_schedule(
+        rs=[(sh["r"], sh["stride"], sh["padding"]) for sh in shapes],
+        h_in=shapes[0]["h"], rb=cb.rb)
+
+    fused = dict.fromkeys(("flops", "x_bytes", "w_bytes", "o_bytes",
+                           "hbm_bytes", "n_steps"), 0.0)
+    parts = []
+    for i in range(len(sched)):
+        l = int(sched.layer_ids[i])
+        o0, o1 = int(sched.o0[i]), int(sched.o1[i])
+        sh = shapes[l]
+        band = dict(sh)
+        # padded band buffer: exact halo recurrence rows, W pre-padded
+        band["h"] = (o1 - o0 - 1) * sh["stride"] + sh["r"]
+        band["w"] = sh["w"] + 2 * sh["padding"]
+        band["padding"] = 0
+        t = conv_traffic(band, blks[l], minibatch=n)
+        handoff = bool(sched.flags[i] & FLAG_HANDOFF)
+        x_hbm = t["x_bytes"] if l == 0 else 0.0        # hand-off: VMEM read
+        o_hbm = 0.0 if handoff else t["o_bytes"]       # hand-off: VMEM write
+        part = dict(t)
+        part["x_bytes"], part["o_bytes"] = x_hbm, o_hbm
+        part["hbm_bytes"] = x_hbm + t["w_bytes"] + o_hbm
+        parts.append(part)
+        fused["flops"] += t["flops"]
+        fused["x_bytes"] += x_hbm
+        fused["w_bytes"] += t["w_bytes"]
+        fused["o_bytes"] += o_hbm
+        fused["hbm_bytes"] += part["hbm_bytes"]
+        fused["n_steps"] += t["n_steps"]
+
+    fuse = cb.fits and fused["hbm_bytes"] <= unfused_hbm
+    out = {
+        "fused": fuse,
+        "fits_vmem": cb.fits,
+        "rb": cb.rb,
+        "n_bands": cb.n_bands,
+        "vmem_bytes": cb.vmem_bytes,
+        "n_layers": len(shapes),
+        "unfused_hbm_bytes": unfused_hbm,
+        "unfused_intermediate_bytes": unfused_inter,
+        "unfused_parts": unfused_parts,
+    }
+    if fuse:
+        out.update(fused)
+        out["intermediate_bytes"] = 0.0     # the depth-first invariant
+        out["parts"] = parts
+    else:   # fallback: the chain runs layer-by-layer — price it as such
+        out["flops"] = sum(p["flops"] for p in unfused_parts)
+        out["x_bytes"] = sum(p["x_bytes"] for p in unfused_parts)
+        out["w_bytes"] = sum(p["w_bytes"] for p in unfused_parts)
+        out["o_bytes"] = sum(p["o_bytes"] for p in unfused_parts)
+        out["hbm_bytes"] = unfused_hbm
+        out["n_steps"] = sum(p["n_steps"] for p in unfused_parts)
+        out["intermediate_bytes"] = unfused_inter
+        out["parts"] = unfused_parts
+    return out
 
 
 def bwd_data_traffic(shape: dict, *, minibatch: int = 1,

@@ -1,0 +1,157 @@
+"""Conformance wall for depth-first chain fusion (DESIGN.md §16).
+
+The fused depth-first replay must be *bit-identical* — ``assert_array_equal``,
+not allclose — to the unfused layer-by-layer execution, on both kernel
+backends, across stride/filter sweeps, non-divisor tails, the 224² stem
+geometry planned under a 1 MiB budget, and the full GxM ResNet bottleneck
+with its residual add.  The anchor is the pinned full-shape blocking
+(``kernels.conv2d_chain``): the per-element f32 reduction order depends only
+on ``c_blk``, never on the band split.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend as be
+from repro.core.conv import conv2d_chain_fwd, conv2d_fwd
+from repro.tune.measure import chain_traffic
+
+BACKENDS = ("interpret", "xla")
+
+
+def _layer(rng, c, k, r, stride, *, bn=True, bias=False, relu=True):
+    L = dict(w=jnp.asarray(rng.standard_normal((r, r, c, k)) * 0.1,
+                           jnp.float32),
+             stride=stride, padding=r // 2, relu=relu)
+    if bn:
+        L["scale"] = jnp.asarray(
+            1.0 + 0.2 * rng.standard_normal(k), jnp.float32)
+        L["shift"] = jnp.asarray(
+            0.1 * rng.standard_normal(k), jnp.float32)
+    if bias:
+        L["bias"] = jnp.asarray(0.1 * rng.standard_normal(k), jnp.float32)
+    return L
+
+
+def _unfused(x, layers, impl):
+    out = x
+    for L in layers:
+        out = conv2d_fwd(out, L["w"], stride=L["stride"],
+                         padding=L["padding"], bias=L.get("bias"),
+                         scale=L.get("scale"), shift=L.get("shift"),
+                         residual=L.get("residual"),
+                         relu=L.get("relu", False), impl=impl)
+    return out
+
+
+def _assert_chain_exact(x, layers, impl, rbs=(1, 3, 100)):
+    want = np.asarray(_unfused(x, layers, impl))
+    for rb in rbs:
+        got = np.asarray(conv2d_chain_fwd(x, layers, rb=rb, impl=impl))
+        np.testing.assert_array_equal(got, want, err_msg=f"rb={rb}")
+
+
+@pytest.mark.parametrize("impl", BACKENDS)
+@pytest.mark.parametrize("r1,s1,r2,s2", [
+    (1, 1, 3, 1), (3, 1, 1, 2), (3, 2, 3, 1), (1, 2, 1, 1), (3, 2, 3, 2),
+])
+def test_two_layer_stride_filter_sweep(impl, r1, s1, r2, s2):
+    """stride x filter sweep: every (r, stride) combination over a two-conv
+    chain, odd plane dims so every band split hits clip/tail paths."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 17, 13, 8)), jnp.float32)
+    layers = [_layer(rng, 8, 16, r1, s1), _layer(rng, 16, 8, r2, s2)]
+    _assert_chain_exact(x, layers, impl)
+
+
+@pytest.mark.parametrize("impl", BACKENDS)
+def test_non_divisor_pck_tails(impl):
+    """C=24 / K=40 (8-aligned, not lane multiples) and P that no rb
+    divides: ceil-div tails in every blocked dimension."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((1, 19, 11, 24)), jnp.float32)
+    layers = [_layer(rng, 24, 40, 3, 1), _layer(rng, 40, 24, 3, 2,
+                                                bias=True)]
+    _assert_chain_exact(x, layers, impl, rbs=(1, 4, 7))
+
+
+@pytest.mark.parametrize("impl", BACKENDS)
+def test_ref_fallback_layer_in_chain(impl):
+    """A non-lane-aligned layer (C=12) rides the XLA reference path inside
+    the chain — the dispatch split must stay bit-exact too."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal((1, 14, 10, 12)), jnp.float32)
+    layers = [_layer(rng, 12, 16, 3, 1), _layer(rng, 16, 8, 3, 1)]
+    _assert_chain_exact(x, layers, impl, rbs=(2, 5))
+
+
+@pytest.mark.parametrize("impl", BACKENDS)
+@pytest.mark.parametrize("stride", (1, 2))
+def test_bottleneck_residual_bit_exact(impl, stride):
+    """The ResNet bottleneck 1x1 -> 3x3(s) -> 1x1 with the residual added in
+    the last layer's epilogue: residual bands are sliced per output band."""
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.standard_normal((1, 20, 20, 16)), jnp.float32)
+    layers = [_layer(rng, 16, 8, 1, 1), _layer(rng, 8, 8, 3, stride),
+              _layer(rng, 8, 16, 1, 1)]
+    p_out = (20 + 2 - 3) // stride + 1
+    layers[-1]["residual"] = jnp.asarray(
+        rng.standard_normal((1, p_out, p_out, 16)), jnp.float32)
+    _assert_chain_exact(x, layers, impl, rbs=(1, 3, 100))
+
+
+def test_stem_224_planned_under_1mib():
+    """224² stem geometry: the 1 MiB plan must fuse with a multi-band
+    schedule, and replaying at the planned rb stays bit-exact."""
+    shapes = [dict(h=224, w=224, c=8, k=16, r=3, s=3, stride=2, padding=1),
+              dict(h=112, w=112, c=16, k=16, r=3, s=3, stride=1, padding=1)]
+    t = chain_traffic(shapes, minibatch=1, vmem_budget=1 << 20)
+    assert t["fused"] and t["fits_vmem"]
+    assert t["n_bands"] > 1                      # banding actually engaged
+    assert t["vmem_bytes"] <= 1 << 20
+    assert t["intermediate_bytes"] == 0.0
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.standard_normal((1, 224, 224, 8)), jnp.float32)
+    layers = [_layer(rng, 8, 16, 3, 2), _layer(rng, 16, 16, 3, 1)]
+    _assert_chain_exact(x, layers, "xla", rbs=(int(t["rb"]),))
+
+
+@pytest.mark.parametrize("impl", BACKENDS)
+def test_gxm_resnet_bottlenecks_on_off(impl, monkeypatch):
+    """Full GxM forward of a two-stage ResNet (bottleneck + projection +
+    residual + downsampled stage): the chain-fusion knob must not change a
+    single bit, and the fused path must actually run (once per chain)."""
+    import repro.graph.executor as ex
+    from repro.graph.topology import resnet50
+    gxm = ex.GxM(resnet50(num_classes=10, stages=(1, 1)), impl=impl,
+                 num_classes=10)
+    assert len(gxm.etg.chains) == 2              # one bottleneck per stage
+    params = gxm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(29)
+    x = jnp.asarray(rng.standard_normal((1, 56, 56, 3)), jnp.float32)
+    with be.use_chain_fusion("off"):
+        want = gxm.forward(params, x, train=False)
+    calls = []
+    orig = ex.conv2d_chain_fwd
+    monkeypatch.setattr(ex, "conv2d_chain_fwd",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    with be.use_chain_fusion("on"):
+        got = gxm.forward(params, x, train=False)
+    assert len(calls) == len(gxm.etg.chains)     # every chain ran fused
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gxm_training_forward_never_fuses(monkeypatch):
+    """Chain fusion is inference-only: a train-mode forward must bypass the
+    fused path even with the knob on (batch-norm needs batch stats)."""
+    import repro.graph.executor as ex
+    from repro.graph.topology import resnet50
+    gxm = ex.GxM(resnet50(num_classes=10, stages=(1, 1)), impl="xla",
+                 num_classes=10)
+    params = gxm.init(jax.random.PRNGKey(1))
+    x = jnp.zeros((1, 56, 56, 3), jnp.float32)
+    monkeypatch.setattr(ex, "conv2d_chain_fwd",
+                        lambda *a, **k: pytest.fail("fused path in train"))
+    with be.use_chain_fusion("on"):
+        gxm.forward(params, x, train=True)

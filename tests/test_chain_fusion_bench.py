@@ -1,0 +1,61 @@
+"""BENCH_chain_fusion invariants: every chain's fused HBM traffic must stay
+at-or-below the unfused sum (the fallback rule makes this structural), fused
+chains move zero intermediate bytes, and at least one bottleneck chain fuses
+in both the live-budget and the 1 MiB pressure tables — the depth-first
+dividend other sessions diff against."""
+from benchmarks.chain_fusion_bench import (PRESSURE_BUDGET, build_report,
+                                           network_chains)
+from repro.graph.topology import inception_v3, resnet50
+
+
+def test_chains_cover_both_topologies():
+    resnet = network_chains(resnet50, (224, 224))
+    incep = network_chains(inception_v3, (299, 299))
+    assert sum(sp["count"] for sp in resnet) == 16   # one per bottleneck
+    assert len(resnet) >= 4                          # distinct geometries
+    assert incep                                     # tower chains exist
+    for sp in resnet + incep:
+        assert len(sp["layers"]) >= 2
+        assert len(sp["shapes"]) == len(sp["layers"])
+        assert len(sp["halo_growth"]) == len(sp["layers"])
+
+
+def test_fused_dominates_unfused_everywhere():
+    report = build_report()
+    assert set(report["tables"]) == {"resnet50", "resnet50_1mib",
+                                     "inception_v3", "inception_v3_1mib"}
+    for tname, table in report["tables"].items():
+        s = table["summary"]
+        assert s["n_fused"] >= 1, tname
+        assert s["min_traffic_margin"] >= 1.0, tname
+        assert s["fused_intermediate_bytes"] == 0, tname
+        assert s["hbm_saved_bytes"] >= 0, tname
+        for rec in table["chains"]:
+            cid = (tname, rec["chain"])
+            assert rec["hbm_bytes"] <= rec["unfused_hbm_bytes"], cid
+            assert rec["traffic_margin"] >= 1.0, cid
+            if rec["fused"]:
+                assert rec["intermediate_bytes"] == 0, cid
+                assert rec["fits_vmem"], cid
+                assert rec["vmem_working_set"] <= table["vmem_budget"], cid
+            else:
+                # fallback prices the unfused execution exactly
+                assert rec["hbm_bytes"] == rec["unfused_hbm_bytes"], cid
+                assert rec["traffic_margin"] == 1.0, cid
+                assert rec["speedup"] == 1.0, cid
+
+
+def test_pressure_tables_use_1mib_budget():
+    report = build_report()
+    assert report["pressure_budget"] == PRESSURE_BUDGET == 1 << 20
+    for net in ("resnet50", "inception_v3"):
+        assert report["tables"][f"{net}_1mib"]["vmem_budget"] == 1 << 20
+        assert report["tables"][net]["vmem_budget"] == report["vmem_budget"]
+        # pressure never fuses *more* coarsely than the roomy context: every
+        # chain that fuses at 1 MiB fuses at >= 1 MiB budgets too
+        if report["vmem_budget"] >= 1 << 20:
+            roomy = {r["chain"]: r["fused"]
+                     for r in report["tables"][net]["chains"]}
+            for r in report["tables"][f"{net}_1mib"]["chains"]:
+                if r["fused"]:
+                    assert roomy[r["chain"]], r["chain"]

@@ -1,0 +1,162 @@
+"""Property tests for the graph fusion passes (core.fusion / graph.etg).
+
+Random network lists (conv towers, bn/relu epilogues, residual blocks,
+chain-breaking pools) drive the invariants the depth-first chain pass
+depends on: idempotence, the single-consumer rule, topological validity of
+the fused task list, the closed-form halo algebra, and the prebuilt
+users-index matching the naive per-node rescan it replaced.
+"""
+import dataclasses
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fusion import (Node, chain_band_rows, consumers,
+                               detect_chains, fuse_network, users_index)
+from repro.graph.etg import build_etg, extend_nl, toposort
+
+# segment draws: (kind, r, stride, depth)
+_SEG = st.tuples(st.sampled_from(["conv", "res", "pool"]),
+                 st.sampled_from([1, 3, 5]), st.integers(1, 2),
+                 st.integers(1, 3))
+_SEGS = st.lists(_SEG, min_size=1, max_size=8)
+
+
+def build_nl(segs) -> list[Node]:
+    """Random-but-valid network list: a conv tower with optional bn/relu
+    epilogues, residual sub-blocks (multi-consumer edges), and pools."""
+    nodes = [Node("input", "input", [], {})]
+    cur, c, uid = "input", 8, 0
+
+    def conv(inp, r, stride, k):
+        nonlocal uid
+        name = f"c{uid}"
+        uid += 1
+        nodes.append(Node(name, "conv", [inp],
+                          dict(c=c, k=k, r=r, s=r, stride=stride,
+                               padding=r // 2)))
+        return name, k
+
+    for kind, r, stride, depth in segs:
+        uid += 1
+        if kind == "pool":
+            name = f"p{uid}"
+            nodes.append(Node(name, "maxpool", [cur],
+                              dict(window=2, stride=2, padding=0)))
+            cur = name
+        elif kind == "conv":
+            cur, c = conv(cur, r, stride, 8 * depth)
+            if depth >= 2:
+                nodes.append(Node(f"b{uid}", "bn", [cur], dict(k=c)))
+                cur = f"b{uid}"
+            if depth == 3:
+                nodes.append(Node(f"r{uid}", "relu", [cur], {}))
+                cur = f"r{uid}"
+        else:                                   # residual block, stride 1
+            start = cur
+            for _ in range(depth):
+                cur, c = conv(cur, r, 1, c)
+            nodes.append(Node(f"a{uid}", "add", [cur, start], {}))
+            cur = f"a{uid}"
+    return nodes
+
+
+def _sig(nodes):
+    return tuple((n.name, n.op, tuple(n.inputs),
+                  tuple(sorted((k, str(v)) for k, v in n.attrs.items())),
+                  tuple(k for k, _ in n.fused))
+                 for n in nodes)
+
+
+def _copy(nodes):
+    return [dataclasses.replace(n, inputs=list(n.inputs),
+                                attrs=dict(n.attrs), fused=list(n.fused))
+            for n in nodes]
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS)
+def test_fuse_network_idempotent(segs):
+    enl = extend_nl(build_nl(segs))
+    once = fuse_network(_copy(enl))
+    twice = fuse_network(_copy(once))
+    assert _sig(twice) == _sig(once)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS)
+def test_detect_chains_pure_and_idempotent(segs):
+    tasks = toposort(fuse_network(extend_nl(build_nl(segs))))
+    before = _sig(tasks)
+    first = detect_chains(tasks)
+    assert _sig(tasks) == before                # pure: no rewriting
+    assert detect_chains(tasks) == first        # deterministic / idempotent
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS)
+def test_chains_never_cross_multi_consumer_edges(segs):
+    etg = build_etg(build_nl(segs))
+    users = users_index(etg.tasks)
+    by_name = {t.name: t for t in etg.tasks}
+    for ch in etg.chains:
+        assert len(ch) >= 2
+        for prod, cons in zip(ch.names, ch.names[1:]):
+            uses = users.get(prod, [])
+            assert len(uses) == 1, (prod, [u.name for u in uses])
+            assert uses[0].name == cons
+            # the link is the *data* edge, never the residual slot
+            assert by_name[cons].inputs[0] == prod
+            assert by_name[cons].op == "conv" and by_name[prod].op == "conv"
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS)
+def test_fused_graph_stays_topologically_valid(segs):
+    etg = build_etg(build_nl(segs))
+    alias = {}
+    for t in etg.tasks:
+        if "output_name" in t.attrs:
+            alias[t.attrs["output_name"]] = t.name
+    seen = set()
+    for t in etg.tasks:
+        for i in t.inputs:
+            i = alias.get(i, i)
+            assert i == "input" or i in seen, (t.name, i)
+        seen.add(t.name)
+    # chain stamping covers exactly the chained convs, in order
+    for ci, ch in enumerate(etg.chains):
+        for pos, name in enumerate(ch.names):
+            t = next(x for x in etg.tasks if x.name == name)
+            assert t.attrs["chain_id"] == ci and t.attrs["chain_pos"] == pos
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS, st.integers(1, 17))
+def test_halo_growth_closed_form(segs, rows_out):
+    etg = build_etg(build_nl(segs))
+    for ch in etg.chains:
+        assert ch.halo_growth == tuple((r - 1) * s for r, s, _ in ch.rs)
+        rows = chain_band_rows(ch.rs, rows_out)
+        assert len(rows) == len(ch) + 1 and rows[-1] == rows_out
+        for l, (r, stride, _pad) in enumerate(ch.rs):
+            assert rows[l] == (rows[l + 1] - 1) * stride + r
+            # halo is a fixed cost: growing the output band by one row grows
+            # layer l's input band by exactly the product of the downstream
+            # strides — the (r-1)·stride halo terms never compound with rb
+            prod = 1
+            for _, s2, _ in ch.rs[l:]:
+                prod *= s2
+            assert chain_band_rows(ch.rs, rows_out + 1)[l] - rows[l] == prod
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEGS)
+def test_users_index_matches_naive_rescan(segs):
+    """The O(edges) prebuilt index (the PR-10 fix for fuse_network's O(n²)
+    rescan) must agree with the per-name fallback scan on every tensor."""
+    nodes = extend_nl(build_nl(segs))
+    idx = users_index(nodes)
+    for n in nodes:
+        with_idx = consumers(nodes, n.name, index=idx)
+        naive = consumers(nodes, n.name)
+        assert [u.name for u in with_idx] == [u.name for u in naive]

@@ -2,14 +2,17 @@
 block-refetch traffic model (tune.measure.conv_traffic), the band working
 set (core.blocking.conv_working_set), and the roofline cost functions
 (launch.roofline) — plus the stable-key contracts the perfci extractors
-join on."""
+join on, and the depth-first chain pricing (chain_traffic / chain_roofline)
+whose fallback rule makes "fused <= unfused" true on every shape."""
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blocking import ConvBlocking, conv_working_set
-from repro.launch.roofline import (COMPOSITE_ROOFLINE_KEYS,
-                                   KERNEL_ROOFLINE_KEYS, composite_roofline,
-                                   kernel_roofline)
-from repro.tune.measure import CONV_TRAFFIC_KEYS, conv_traffic
+from repro.launch.roofline import (CHAIN_ROOFLINE_KEYS,
+                                   COMPOSITE_ROOFLINE_KEYS,
+                                   KERNEL_ROOFLINE_KEYS, chain_roofline,
+                                   composite_roofline, kernel_roofline)
+from repro.tune.measure import (CHAIN_TRAFFIC_KEYS, CONV_TRAFFIC_KEYS,
+                                chain_traffic, conv_traffic)
 
 _shapes = st.tuples(
     st.integers(7, 28),            # h == w
@@ -124,3 +127,72 @@ def test_stable_key_contracts():
     assert tuple(roof) == KERNEL_ROOFLINE_KEYS
     comp = composite_roofline([t])
     assert tuple(comp) == COMPOSITE_ROOFLINE_KEYS
+
+
+# -- depth-first chain pricing (DESIGN.md §16) -------------------------------
+
+_chain_layers = st.lists(
+    st.tuples(st.sampled_from([1, 3]),          # r == s
+              st.integers(1, 2),                # stride
+              st.sampled_from([8, 16, 32])),    # k
+    min_size=2, max_size=4)
+
+
+def _chain_shapes(h0, layers):
+    shapes, h, c = [], h0, 8
+    for r, stride, k in layers:
+        pad = r // 2
+        shapes.append({"h": h, "w": h, "c": c, "k": k, "r": r, "s": r,
+                       "stride": stride, "padding": pad})
+        h = (h + 2 * pad - r) // stride + 1
+        c = k
+    return shapes
+
+
+@settings(max_examples=30)
+@given(st.integers(16, 40), _chain_layers,
+       st.sampled_from([1 << 18, 1 << 20, None]))
+def test_chain_fused_never_exceeds_unfused(h0, layers, budget):
+    """The fallback rule makes "fused <= unfused HBM" true on *every*
+    generated chain and budget — exactly equal when the chain falls back,
+    with zero intermediate bytes whenever it fuses."""
+    t = chain_traffic(_chain_shapes(h0, layers), vmem_budget=budget)
+    assert t["hbm_bytes"] <= t["unfused_hbm_bytes"] + 1e-6
+    assert t["n_layers"] == len(layers)
+    if t["fused"]:
+        assert t["fits_vmem"]
+        assert t["intermediate_bytes"] == 0.0
+        if all(stride == 1 for _, stride, _k in layers):
+            # stride-1 chains: bands cover every intermediate row, so halo
+            # recompute can only add FLOPs (a strided consumer may instead
+            # *skip* trailing producer rows the unfused path computes)
+            assert t["flops"] >= sum(p["flops"]
+                                     for p in t["unfused_parts"]) - 1e-6
+    else:
+        assert t["hbm_bytes"] == t["unfused_hbm_bytes"]
+        assert t["intermediate_bytes"] == t["unfused_intermediate_bytes"]
+        assert t["intermediate_bytes"] > 0.0
+
+
+@settings(max_examples=30)
+@given(st.integers(16, 40), _chain_layers,
+       st.sampled_from([1 << 18, 1 << 20, None]))
+def test_chain_roofline_consistent_with_traffic(h0, layers, budget):
+    t = chain_traffic(_chain_shapes(h0, layers), vmem_budget=budget)
+    roof = chain_roofline(t)
+    assert tuple(roof) == CHAIN_ROOFLINE_KEYS
+    assert roof["hbm_bytes"] == t["hbm_bytes"]
+    assert roof["fused"] == t["fused"]
+    assert 0.0 < roof["efficiency"] <= 1.0
+    if not t["fused"]:
+        # fallback prices the identical launch list: speedup exactly 1
+        assert roof["speedup"] == 1.0
+        assert roof["cost_s"] == roof["unfused_cost_s"]
+
+
+def test_chain_stable_key_contracts():
+    """perfci joins on these names too (SCHEMA_VERSION bump on rename)."""
+    shapes = _chain_shapes(28, [(1, 1, 16), (3, 2, 16), (1, 1, 32)])
+    t = chain_traffic(shapes)
+    assert set(CHAIN_TRAFFIC_KEYS) <= set(t)
+    assert tuple(chain_roofline(t)) == CHAIN_ROOFLINE_KEYS

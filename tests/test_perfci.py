@@ -33,7 +33,7 @@ def test_extractors_cover_all_benches(fresh):
     assert context == perfci.DEFAULT_CONTEXT
     prefixes = {m.split("/")[0] for m in metrics}
     assert prefixes == {"conv_fwd", "bwd_wu", "train_scaling", "q8_infer",
-                        "resilience", "serve_fleet"}
+                        "resilience", "serve_fleet", "chain_fusion"}
     assert len(metrics) > 300        # per-layer series, not a summary
 
 
